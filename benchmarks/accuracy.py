@@ -1,0 +1,91 @@
+"""Paper accuracy benchmarks (Sec. III): Fig. 5, Fig. 6, Fig. 7.
+
+Each function returns (rows, derived) where rows are printable CSV lines
+and derived is a dict of the headline numbers compared to the paper.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import bp
+from repro.core.quantize import e4m3_positive_values
+
+
+def _nearest(grid: np.ndarray, x: np.ndarray) -> np.ndarray:
+    idx = np.searchsorted((grid[1:] + grid[:-1]) / 2, x)
+    return grid[np.clip(idx, 0, len(grid) - 1)]
+
+
+def _fp8_norm_grid() -> np.ndarray:
+    """E4M3 values representable in [0,1] (56 values, Fig. 4) plus zero."""
+    vals = e4m3_positive_values(1.0)
+    return np.concatenate([[0.0], vals])
+
+
+def _ideal_values() -> np.ndarray:
+    """The 119 positive E4M3 values <= 240, normalised by 240 (FP64)."""
+    return e4m3_positive_values(240.0) / 240.0
+
+
+def fig5_mapping() -> Tuple[List[str], Dict[str, float]]:
+    ideal = _ideal_values()
+    fp8 = _nearest(_fp8_norm_grid(), ideal)
+    bp10 = bp.quantize_to_levels(ideal) / 10.0
+    e_fp8 = float(np.mean(np.abs(fp8 - ideal)))
+    e_bp = float(np.mean(np.abs(bp10 - ideal)))
+    rows = [f"fig5_mapping_fp8,{e_fp8 * 100:.3f}%,paper=0.21%",
+            f"fig5_mapping_bp10,{e_bp * 100:.3f}%,paper=1.19%"]
+    return rows, {"fp8": e_fp8, "bp10": e_bp, "n_values": len(ideal)}
+
+
+def fig6_multiplication() -> Tuple[List[str], Dict[str, float]]:
+    ideal = _ideal_values()
+    prod = ideal[:, None] * ideal[None, :]
+    grid = _fp8_norm_grid()
+    fp8_in = _nearest(grid, ideal)
+    fp8_prod = _nearest(grid, (fp8_in[:, None] * fp8_in[None, :]).ravel()
+                        ).reshape(prod.shape)
+    lut = bp.mult_lut()
+    lv = bp.quantize_to_levels(ideal)
+    bp_prod = lut[lv[:, None], lv[None, :]] / 10.0
+    e_fp8 = float(np.mean(np.abs(fp8_prod - prod)))
+    e_bp = float(np.mean(np.abs(bp_prod - prod)))
+    rows = [f"fig6_mult_fp8,{e_fp8 * 100:.3f}%,paper=0.03%",
+            f"fig6_mult_bp10,{e_bp * 100:.3f}%,paper=0.30%",
+            f"fig6_combinations,{prod.size},paper=14161"]
+    return rows, {"fp8": e_fp8, "bp10": e_bp}
+
+
+def fig7_frobenius(dims=(4, 8, 16, 32, 64, 128, 256, 512), trials: int = 100,
+                   seed: int = 0) -> Tuple[List[str], Dict[int, float]]:
+    rng = np.random.default_rng(seed)
+    lut = bp.mult_lut().astype(np.float32)
+    grid = _fp8_norm_grid()
+    rows, out = [], {}
+    right, left = bp.bent_pyramid_datasets()
+    rb = right.bitstreams_bp8.astype(np.float32)
+    lb = left.bitstreams_bp8.astype(np.float32)
+    for n in dims:
+        t = trials if n <= 128 else max(20, trials // 5)
+        errs_bp, errs_fp8 = [], []
+        for _ in range(t):
+            x = rng.random((n, n), dtype=np.float32)
+            y = rng.random((n, n), dtype=np.float32)
+            a = x @ y
+            # bit-faithful BP matmul via bitplanes (== AND/popcount)
+            xb = rb[bp.quantize_to_levels(x)].reshape(n, n * 8)
+            yb = lb[bp.quantize_to_levels(y)].transpose(0, 2, 1).reshape(n * 8, n)
+            ahat = (xb @ yb) / 10.0
+            errs_bp.append(np.linalg.norm(a - ahat) / np.linalg.norm(a))
+            xq = _nearest(grid, x.ravel()).reshape(x.shape)
+            yq = _nearest(grid, y.ravel()).reshape(y.shape)
+            errs_fp8.append(np.linalg.norm(a - xq @ yq) / np.linalg.norm(a))
+        out[n] = float(np.mean(errs_bp))
+        paper = {4: "9.42%", 512: "1.81%"}.get(n, "")
+        rows.append(f"fig7_frobenius_bp10_{n}x{n},{out[n] * 100:.2f}%,"
+                    f"fp8={np.mean(errs_fp8) * 100:.2f}%"
+                    + (f" paper={paper}" if paper else ""))
+    return rows, out

@@ -1,0 +1,64 @@
+"""Paper hardware benchmarks: Table II (energy), Table III (comparison),
+plus the beyond-paper LM-workload energy projection."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core import oisma_cost as oc
+
+
+def table2_energy() -> Tuple[List[str], Dict[str, float]]:
+    rows = [
+        f"table2_read_fj_per_bit,{oc.E_READ_FJ_PER_BIT},paper=237",
+        f"table2_mult_single_fj_per_bit,{oc.E_MULT_SINGLE_FJ_PER_BIT},paper=216",
+        f"table2_mult_vmm_fj_per_bit,{oc.E_MULT_VMM_FJ_PER_BIT},paper=178",
+        f"table2_accum_fj_per_bit,{oc.E_ACCUM_FJ_PER_BIT},paper=102.65",
+        f"table2_mac_pj,{oc.E_MAC_PJ:.4f},paper=2.245",
+        f"table2_vmm_saving,{(1 - oc.E_MULT_VMM_FJ_PER_BIT / oc.E_MULT_SINGLE_FJ_PER_BIT) * 100:.1f}%,paper=17.6%",
+    ]
+    return rows, {"mac_pj": oc.E_MAC_PJ}
+
+
+def table3_comparison() -> Tuple[List[str], Dict[str, Dict[str, float]]]:
+    c180 = oc.OISMAConfig(180)
+    c22 = oc.OISMAConfig(22)
+    rows = [
+        f"table3_oisma180_tops_w,{c180.tops_per_watt:.3f},paper=0.891",
+        f"table3_oisma180_gops_mm2,{c180.tops_per_mm2 * 1000:.2f},paper=3.98",
+        f"table3_oisma180_peak_gops,{c180.peak_tops * 1000:.1f},paper=3.2",
+        f"table3_oisma22_tops_w,{c22.tops_per_watt:.1f},paper=89.5",
+        f"table3_oisma22_tops_mm2,{c22.tops_per_mm2:.2f},paper=3.28",
+        f"table3_1mb_engine_gops,{oc.PEAK_GOPS_1MB_180NM:.1f},paper=819.2",
+    ]
+    comp = oc.comparison_table()
+    for label, vals in comp.items():
+        if "oisma22_energy_x" in vals:
+            rows.append(
+                f"table3_vs_{label.replace(' ', '_').replace('(', '').replace(')', '')},"
+                f"{vals['oisma22_energy_x']:.1f}x_energy,"
+                f"{vals['oisma22_area_x']:.1f}x_area")
+    return rows, comp
+
+
+def lm_workload_energy(arch: str = "gemma3_12b") -> Tuple[List[str], Dict[str, float]]:
+    """Beyond-paper: project the OISMA 1MB engine's energy for one LM
+    decode token vs an equivalent-count bf16 MAC budget on TPU v5e.
+
+    TPU energy basis: ~200 W per chip at 197 TFLOP/s bf16 -> ~1.0 pJ per
+    bf16 MAC (2 FLOPs); OISMA BP8 MAC = 2.245 pJ at 180nm, 22.4 fJ at 22nm
+    (scaled).  BP8 trades ~2% matmul accuracy (Fig. 7) for the energy win.
+    """
+    from repro.configs import get_config
+    from repro.roofline.model import fwd_flops_per_token
+    cfg = get_config(arch)
+    macs = fwd_flops_per_token(cfg, 4096) / 2.0
+    e22 = oc.OISMAConfig(22)
+    oisma_j = macs * e22.mac_energy_pj * 1e-12
+    tpu_j = macs * 1.0 * 1e-12
+    rows = [
+        f"lm_energy_{arch}_macs_per_tok,{macs:.3e},decode@4k",
+        f"lm_energy_{arch}_oisma22_j_per_tok,{oisma_j:.4f},engine=1MBx{e22.arrays}",
+        f"lm_energy_{arch}_tpu_bf16_j_per_tok,{tpu_j:.4f},~1pJ/MAC",
+        f"lm_energy_{arch}_ratio,{tpu_j / oisma_j:.1f}x,oisma_advantage",
+    ]
+    return rows, {"macs": macs, "oisma_j": oisma_j, "tpu_j": tpu_j}

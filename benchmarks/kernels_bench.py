@@ -1,0 +1,40 @@
+"""Kernel micro-benchmarks (CPU timings of the jnp fast paths + interpret-
+mode Pallas correctness cost; TPU wall-clock is out of scope for this
+container — the roofline tables carry the TPU projections)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bp_matmul as bpm
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bp_matmul_impls(n: int = 256) -> Tuple[List[str], dict]:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((n, n), np.float32))
+    y = jnp.asarray(rng.random((n, n), np.float32))
+    rows = []
+    out = {}
+    base = jax.jit(lambda a, b: a @ b)
+    t_base = _time(base, x, y)
+    rows.append(f"kernel_matmul_bf16_{n},{t_base:.1f}us,baseline")
+    for impl in ("bitplane", "lowrank"):
+        f = jax.jit(lambda a, b, impl=impl: bpm.bp_matmul(a, b, impl=impl))
+        t = _time(f, x, y)
+        rows.append(f"kernel_bp_matmul_{impl}_{n},{t:.1f}us,"
+                    f"{t / t_base:.1f}x_vs_bf16")
+        out[impl] = t
+    return rows, out

@@ -1,0 +1,47 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV.  Figures:
+  Fig 5  data-mapping accuracy (FP8 vs BP10)
+  Fig 6  multiplication accuracy
+  Fig 7  MatMul relative Frobenius error, 4x4 .. 512x512
+  Tab II OISMA operation energy
+  Tab III efficiency comparison vs state-of-the-art IMC + 22nm scaling
+  (beyond-paper) LM-workload energy projection + kernel timings
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced trials for CI")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import accuracy, hardware, kernels_bench
+
+    t0 = time.time()
+    print("name,value,derived")
+    for rows, _ in (accuracy.fig5_mapping(), accuracy.fig6_multiplication()):
+        for r in rows:
+            print(r)
+    trials = 20 if args.fast else 100
+    dims = (4, 8, 16, 32, 64, 128, 256, 512)
+    rows, _ = accuracy.fig7_frobenius(dims=dims, trials=trials)
+    for r in rows:
+        print(r)
+    for rows, _ in (hardware.table2_energy(), hardware.table3_comparison(),
+                    hardware.lm_workload_energy()):
+        for r in rows:
+            print(r)
+    rows, _ = kernels_bench.bp_matmul_impls(128 if args.fast else 256)
+    for r in rows:
+        print(r)
+    print(f"total_bench_seconds,{time.time() - t0:.1f},", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

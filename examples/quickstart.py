@@ -1,0 +1,45 @@
+"""Quickstart: the OISMA pipeline in one page.
+
+  quantise -> Bent-Pyramid bitstreams -> in-'memory' stochastic multiply
+  (AND/popcount == bitplane MXU matmul) -> accumulation -> rescale,
+  plus the architectural energy estimate for the same workload.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bp
+from repro.core.bp_matmul import bp_matmul
+from repro.core.oisma_cost import OISMAConfig, matmul_cost
+from repro.kernels.ops import oisma_matmul
+
+# --- the Bent-Pyramid datasets (paper Fig. 3) ---------------------------
+right, left = bp.bent_pyramid_datasets()
+print("right-biased 0.3:", "".join(map(str, right.bitstreams[3])))
+print("left-biased  0.6:", "".join(map(str, left.bitstreams[6])))
+lut = bp.mult_lut()
+print(f"0.3 x 0.6 -> popcount(AND)/10 = {lut[3,6]/10}  (exact 0.18)\n")
+
+# --- a MatMul through the OISMA simulation ------------------------------
+rng = np.random.default_rng(0)
+n = 128
+x = rng.random((n, n), np.float32)
+y = rng.random((n, n), np.float32)
+exact = x @ y
+
+approx = np.asarray(bp_matmul(jnp.asarray(x), jnp.asarray(y)))  # jnp bitplane
+rel = np.linalg.norm(exact - approx) / np.linalg.norm(exact)
+print(f"{n}x{n} MatMul, BP8 vs exact: rel Frobenius error {rel*100:.2f}% "
+      f"(paper reports 2.2% at this size)")
+
+kern = np.asarray(oisma_matmul(jnp.asarray(x), jnp.asarray(y)))  # Pallas kernel
+print(f"Pallas kernel == jnp bitplane: "
+      f"{np.allclose(kern, approx, atol=1e-4)}\n")
+
+# --- what would the OISMA engine spend? ---------------------------------
+for nm in (180, 22):
+    cfg = OISMAConfig(technology_nm=nm, arrays=256)  # 1MB engine
+    c = matmul_cost(n, n, n, cfg)
+    print(f"OISMA 1MB engine @{nm}nm: {c.energy_j*1e6:8.2f} uJ, "
+          f"{c.latency_s*1e3:6.2f} ms, {cfg.tops_per_watt:6.2f} TOPS/W")

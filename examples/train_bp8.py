@@ -1,0 +1,55 @@
+"""End-to-end training driver: a small LM trained with OISMA-simulated
+matmuls (matmul_mode='bp8', STE gradients) vs the bf16 reference, with
+checkpointing + auto-resume.
+
+The model is a reduced h2o-danube (llama-style, SWA) — the same code path
+the production configs use; scale up with --arch/--steps on real hardware.
+
+Run: PYTHONPATH=src python examples/train_bp8.py --steps 60
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import build
+from repro.optim.optimizer import OptimizerConfig
+from repro.train.trainer import TrainerConfig, train
+
+
+def run(cfg, steps, ckpt_dir=None, label=""):
+    model = build(cfg)
+    shape = ShapeConfig("train", "train", seq_len=64, global_batch=8)
+    opt = OptimizerConfig(learning_rate=3e-3, warmup_steps=5,
+                          total_steps=steps)
+    tcfg = TrainerConfig(total_steps=steps, ckpt_every=max(10, steps // 4),
+                         ckpt_dir=ckpt_dir)
+    _, hist = train(model, cfg, shape, tcfg, opt_cfg=opt)
+    first = sum(h["loss"] for h in hist[:5]) / max(1, len(hist[:5]))
+    last = sum(h["loss"] for h in hist[-5:]) / max(1, len(hist[-5:]))
+    dt = sum(h["dt"] for h in hist) / max(1, len(hist))
+    print(f"[{label:5s}] loss {first:.3f} -> {last:.3f} "
+          f"({len(hist)} steps, {dt*1e3:.0f} ms/step)")
+    return last
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o_danube_1p8b")
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    base = get_config(args.arch, smoke=True)
+    with tempfile.TemporaryDirectory() as d:
+        print(f"training reduced {base.name} for {args.steps} steps "
+              f"(checkpoints -> {d})")
+        l_bf = run(base, args.steps, ckpt_dir=d, label="bf16")
+        l_bp = run(dataclasses.replace(base, matmul_mode="bp8"),
+                   args.steps, label="bp8")
+        print(f"\nOISMA-simulated training converges: bf16 {l_bf:.3f} vs "
+              f"bp8 {l_bp:.3f} (both well below the ~6.2 random-init loss)")
+
+
+if __name__ == "__main__":
+    main()

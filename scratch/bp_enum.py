@@ -1,0 +1,156 @@
+"""Exhaustively enumerate nested-pyramid BP datasets consistent with the
+paper's pinned examples; select by match to the published accuracy curve.
+
+Nested pyramid = block grows by one bit per level, choosing left or right
+(clamped by the dataset's wall constraints). Pins: right level3 = [5,7],
+left level6 = [1,6].
+"""
+import sys
+sys.path.insert(0, "/root/repo/src")
+import itertools
+import numpy as np
+
+# cell probabilities and conditional means for rint-quantized uniform [0,1]
+P = np.array([0.05] + [0.1] * 8 + [0.15])
+M1 = np.array([0.025] + [0.1 * i for i in range(1, 9)] + [0.925])
+# E[x^2 | cell]
+edges = np.array([0.0, 0.05, 0.15, 0.25, 0.35, 0.45, 0.55, 0.65, 0.75, 0.85, 1.0])
+M2 = np.array([(edges[i+1]**3 - edges[i]**3) / (3 * (edges[i+1] - edges[i]))
+               for i in range(10)])
+
+
+def enum_side(pin_level, pin_block, wall_lo, wall_hi):
+    """All nested growth paths hitting pin_block at pin_level."""
+    out = []
+    lo0, hi0 = pin_block
+    # enumerate prefixes: paths from an apex to the pinned block
+    n_pre = pin_level - 1  # steps from level1 to pin_level
+    for apex in range(lo0, hi0 + 1):
+        lefts_needed = apex - lo0
+        rights_needed = hi0 - apex
+        if lefts_needed + rights_needed != n_pre:
+            continue
+        for pattern in itertools.permutations("L" * lefts_needed + "R" * rights_needed):
+            # dedupe handled by set below
+            blocks = [(apex, apex)]
+            lo, hi = apex, apex
+            ok = True
+            for g in pattern:
+                if g == "L":
+                    lo -= 1
+                else:
+                    hi += 1
+                if lo < wall_lo or hi > wall_hi:
+                    ok = False
+                    break
+                blocks.append((lo, hi))
+            if not ok:
+                continue
+            # continue from pin to level 9 with all L/R choices (clamped)
+            n_post = 9 - pin_level
+            for post in itertools.product("LR", repeat=n_post):
+                blocks2 = list(blocks)
+                lo2, hi2 = blocks2[-1]
+                ok2 = True
+                for g in post:
+                    if g == "L":
+                        if lo2 - 1 < wall_lo:
+                            g = "R"
+                    else:
+                        if hi2 + 1 > wall_hi:
+                            g = "L"
+                    if g == "L":
+                        lo2 -= 1
+                    else:
+                        hi2 += 1
+                    if lo2 < wall_lo or hi2 > wall_hi:
+                        ok2 = False
+                        break
+                    blocks2.append((lo2, hi2))
+                if ok2 and len(blocks2) == 9:
+                    out.append(tuple(b[0] for b in blocks2))
+    return sorted(set(out))
+
+
+def lut_from(r_starts, l_starts):
+    """r_starts/l_starts are 9-tuples for levels 1..9."""
+    ov = np.zeros((10, 10))
+    for a in range(1, 10):
+        for b in range(1, 10):
+            lo = max(r_starts[a - 1], l_starts[b - 1])
+            hi = min(r_starts[a - 1] + a, l_starts[b - 1] + b)
+            ov[a, b] = max(0, hi - lo)
+    return ov
+
+
+def proxy_stats(lut):
+    """mu = E[eps], varf/varg = Var of row/col conditional means, var = Var[eps]."""
+    T = lut / 10.0
+    exy = np.outer(M1, M1)             # E[xy | cells]
+    eps_mean = T - exy                 # E[eps | cell pair]
+    mu = (P[:, None] * P[None, :] * eps_mean).sum()
+    f = (P[None, :] * eps_mean).sum(1)   # E[eps | x-cell]
+    g = (P[:, None] * eps_mean).sum(0)
+    varf = (P * (f - mu) ** 2).sum()
+    varg = (P * (g - mu) ** 2).sum()
+    # E[eps^2 | cells]: eps = T - xy -> E[(T-xy)^2] = T^2 -2T E[xy] + E[x^2]E[y^2]
+    e2 = T**2 - 2 * T * exy + np.outer(M2, M2)
+    var = (P[:, None] * P[None, :] * e2).sum() - mu**2
+    return mu, varf, varg, var
+
+
+def proxy_fro(lut, N):
+    mu, varf, varg, var = proxy_stats(lut)
+    # e_mn = sum_k eps_k ; E[e^2] ~ N^2 mu^2 + N(varf+varg)(N-1)/N... approx:
+    e2 = (N * mu) ** 2 + N * (N - 1) / N * N * (varf + varg) / N + N * var
+    # denominator: E[A_mn^2], A = sum_k x y with shared rows/cols
+    exy, ex2y2 = 0.25, (1/3) ** 2
+    varxy_rowcol = (1/3) * 0.25 - 0.0625  # Var_x E_y[xy] = Var(x/2)= 1/48? use generic
+    a2 = (N * exy) ** 2 + N * (ex2y2 - exy**2) + N * (N - 1) * 2 * (1/48)
+    return np.sqrt(e2 / a2)
+
+
+def frobenius(lut, N, trials, rng):
+    errs = []
+    for _ in range(trials):
+        X, Y = rng.random((N, N), dtype=np.float32), rng.random((N, N), dtype=np.float32)
+        A = X @ Y
+        XL = np.clip(np.rint(X * 10), 0, 9).astype(np.int32)
+        YL = np.clip(np.rint(Y * 10), 0, 9).astype(np.int32)
+        Ahat = np.zeros_like(A)
+        for a in range(1, 10):
+            Xa = (XL == a).astype(np.float32)
+            for b in range(1, 10):
+                if lut[a, b]:
+                    Ahat += np.float32(lut[a, b]) * (Xa @ (YL == b).astype(np.float32))
+        Ahat /= 10.0
+        errs.append(np.linalg.norm(A - Ahat) / np.linalg.norm(A))
+    return float(np.mean(errs))
+
+
+if __name__ == "__main__":
+    rights = enum_side(3, (5, 7), 1, 9)
+    lefts = enum_side(6, (1, 6), 0, 8)
+    print(f"nested candidates: right={len(rights)} left={len(lefts)} pairs={len(rights)*len(lefts)}")
+    scored = []
+    for r in rights:
+        for l in lefts:
+            lut = lut_from(r, l)
+            p4 = proxy_fro(lut, 4)
+            p512 = proxy_fro(lut, 512)
+            d = abs(p4 - 0.0942) / 0.0942 + abs(p512 - 0.0181) / 0.0181
+            scored.append((d, r, l, p4, p512))
+    scored.sort(key=lambda t: t[0])
+    print("top 20 by proxy match:")
+    rng = np.random.default_rng(7)
+    finals = []
+    for d, r, l, p4, p512 in scored[:20]:
+        lut = lut_from(r, l)
+        f4 = frobenius(lut, 4, 400, rng)
+        f512 = frobenius(lut, 512, 5, rng)
+        dd = abs(f4 - 0.0942) / 0.0942 + abs(f512 - 0.0181) / 0.0181
+        finals.append((dd, r, l, f4, f512))
+        print(f"  d={dd:.3f} r={r} l={l} Fro4={f4*100:.2f}% Fro512={f512*100:.2f}% (proxy {p4*100:.2f}/{p512*100:.2f})")
+    finals.sort(key=lambda t: t[0])
+    dd, r, l, f4, f512 = finals[0]
+    print(f"\nBEST: r={r} l={l}  Fro4={f4*100:.2f}% Fro512={f512*100:.2f}%  d={dd:.3f}")

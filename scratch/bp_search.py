@@ -1,0 +1,144 @@
+"""Search for BP dataset placements that reproduce the paper's accuracy.
+
+Strategy: alternating exhaustive sweeps from many random seeds, objective =
+usage-weighted MSE + bias penalty, pins = the paper's two published examples
+(right[3] start=5, left[6] start=1). Evaluate finalists on Fig6/Fig7.
+"""
+import sys
+sys.path.insert(0, "/root/repo/src")
+import numpy as np
+from repro.core import bp
+
+NUM = 10
+# usage distribution of levels after rint-quantizing uniform [0,1]
+p = np.array([0.05] + [0.1] * 8 + [0.15])
+W = np.outer(p, p)
+TARGET = np.outer(np.arange(10), np.arange(10)) / 10.0
+
+
+def lut_from(r_starts, l_starts):
+    ov = np.zeros((NUM, NUM))
+    for a in range(NUM):
+        for b in range(NUM):
+            if a and b:
+                lo = max(r_starts[a], l_starts[b])
+                hi = min(r_starts[a] + a, l_starts[b] + b)
+                ov[a, b] = max(0, hi - lo)
+    return ov
+
+
+def objective(r_starts, l_starts, lam=50.0):
+    err = lut_from(r_starts, l_starts) - TARGET
+    mse = (W * err ** 2).sum()
+    bias = (W * err).sum()
+    return mse + lam * bias ** 2
+
+
+def sweep(r_starts, l_starts, pins_r, pins_l, lam, iters=100):
+    r_starts, l_starts = list(r_starts), list(l_starts)
+    for _ in range(iters):
+        changed = False
+        for a in range(1, NUM):
+            if a in pins_r:
+                continue
+            best, beste = r_starts[a], None
+            for cand in range(1, 10 - a + 1):
+                old = r_starts[a]
+                r_starts[a] = cand
+                e = objective(r_starts, l_starts, lam)
+                r_starts[a] = old
+                if beste is None or e < beste - 1e-12:
+                    best, beste = cand, e
+            if best != r_starts[a]:
+                r_starts[a] = best
+                changed = True
+        for b in range(1, NUM):
+            if b in pins_l:
+                continue
+            best, beste = l_starts[b], None
+            for cand in range(0, 9 - b + 1):
+                old = l_starts[b]
+                l_starts[b] = cand
+                e = objective(r_starts, l_starts, lam)
+                l_starts[b] = old
+                if beste is None or e < beste - 1e-12:
+                    best, beste = cand, e
+            if best != l_starts[b]:
+                l_starts[b] = best
+                changed = True
+        if not changed:
+            break
+    return r_starts, l_starts
+
+
+def frobenius_floor(lut, trials=30, N=512, rng=None):
+    rng = rng or np.random.default_rng(0)
+    errs = []
+    for _ in range(trials):
+        X, Y = rng.random((N, N)), rng.random((N, N))
+        A = X @ Y
+        XL, YL = bp.quantize_to_levels(X), bp.quantize_to_levels(Y)
+        # LUT matmul via one-hot on levels (vectorized with bincount trick):
+        Ahat = np.zeros_like(A)
+        # decompose: Ahat = sum_ab lut[a,b] * (X==a) @ (Y==b)
+        Xa = [(XL == a).astype(np.float32) for a in range(10)]
+        Yb = [(YL == b).astype(np.float32) for b in range(10)]
+        for a in range(1, 10):
+            for b in range(1, 10):
+                if lut[a, b]:
+                    Ahat += lut[a, b] * (Xa[a] @ Yb[b])
+        Ahat /= 10.0
+        errs.append(np.linalg.norm(A - Ahat) / np.linalg.norm(A))
+    return np.mean(errs)
+
+
+def fro_small(lut, N=4, trials=500, rng=None):
+    rng = rng or np.random.default_rng(1)
+    errs = []
+    for _ in range(trials):
+        X, Y = rng.random((N, N)), rng.random((N, N))
+        A = X @ Y
+        XL, YL = bp.quantize_to_levels(X), bp.quantize_to_levels(Y)
+        Ahat = lut[XL[:, :, None], YL[None, :, :].transpose(0, 2, 1)]
+        # careful: need sum_k lut[XL[m,k], YL[k,n]]
+        Ahat = np.zeros((N, N))
+        for m in range(N):
+            for n in range(N):
+                Ahat[m, n] = lut[XL[m, :], YL[:, n]].sum()
+        Ahat /= 10.0
+        errs.append(np.linalg.norm(A - Ahat) / np.linalg.norm(A))
+    return np.mean(errs)
+
+
+if __name__ == "__main__":
+    pins_r, pins_l = {3: 5}, {6: 1}
+    rng = np.random.default_rng(42)
+    seen = {}
+    cn_r, cn_l = bp.bent_pyramid_datasets()
+    seeds = [(list(cn_r.starts), list(cn_l.starts))]
+    for _ in range(300):
+        r = [0] + [rng.integers(1, 10 - n + 1) for n in range(1, 10)]
+        l = [0] + [rng.integers(0, 9 - n + 1) for n in range(1, 10)]
+        r[3], l[6] = 5, 1
+        seeds.append((r, l))
+    best = []
+    for lam in (0.0, 20.0, 100.0):
+        for r0, l0 in seeds:
+            r, l = sweep(r0, l0, pins_r, pins_l, lam)
+            key = (tuple(r), tuple(l))
+            if key not in seen:
+                lut = lut_from(r, l)
+                err = lut - TARGET
+                seen[key] = (objective(r, l, 0.0), (W * err).sum(), key)
+    ranked = sorted(seen.values())
+    print(f"{len(ranked)} distinct local optima")
+    for mse, bias, key in ranked[:8]:
+        print(f"mse={mse:.4f} bias={bias:+.4f} r={key[0]} l={key[1]}")
+    print()
+    # evaluate the top few on Frobenius
+    for mse, bias, key in ranked[:5]:
+        lut = lut_from(list(key[0]), list(key[1]))
+        f512 = frobenius_floor(lut, trials=10)
+        f4 = fro_small(lut, N=4, trials=400)
+        print(f"r={key[0]} l={key[1]}  mse={mse:.4f} bias={bias:+.4f}  "
+              f"Fro@4={f4*100:.2f}% Fro@512={f512*100:.2f}%  (paper 9.42 / 1.81)")

@@ -1,0 +1,89 @@
+"""Scratch validation of BP datasets against the OISMA paper's numbers.
+
+Targets (from the paper):
+  Fig 5: mapping abs err   FP8 0.21%, BP10 1.19%
+  Fig 6: mult abs err      FP8 0.03%, BP10 0.30%
+  Fig 7: rel Frobenius     BP10 9.42% @ 4x4  ->  1.81% @ 512x512
+"""
+import sys
+sys.path.insert(0, "/root/repo/src")
+import numpy as np
+from repro.core import bp
+
+
+def e4m3_positive_values(max_val=240.0):
+    vals = []
+    for E in range(16):
+        for M in range(8):
+            if E == 15 and M == 7:
+                continue  # NaN
+            if E == 0:
+                v = (M / 8.0) * 2.0 ** (-6)
+            else:
+                v = (1 + M / 8.0) * 2.0 ** (E - 7)
+            if 0.0 < v <= max_val:
+                vals.append(v)
+    return np.array(sorted(set(vals)))
+
+
+def nearest(grid, x):
+    idx = np.abs(grid[None, :] - np.asarray(x)[:, None]).argmin(axis=1)
+    return grid[idx]
+
+
+def run(right, left, tag, n_trials=100, dims=(4, 8, 16, 32, 64, 128, 256, 512)):
+    lut = bp.mult_lut(right, left)
+    vals = e4m3_positive_values()
+    print(f"[{tag}] #E4M3 positive values <= 240: {len(vals)}")
+    ideal = vals / 240.0  # normalized FP64 baseline
+
+    fp8_grid = np.concatenate([[0.0], ideal])  # normalized fp8 representable
+    bp_grid = np.arange(10) / 10.0
+
+    fp8_mapped = nearest(fp8_grid, ideal)
+    bp_mapped = bp_grid[bp.quantize_to_levels(ideal)]
+    print(f"[{tag}] Fig5 mapping err: FP8 {np.mean(np.abs(fp8_mapped-ideal))*100:.3f}%  "
+          f"BP10 {np.mean(np.abs(bp_mapped-ideal))*100:.3f}%   (paper: 0.21% / 1.19%)")
+
+    # Fig 6: all pairwise products
+    P = ideal[:, None] * ideal[None, :]
+    fp8_prod = nearest(fp8_grid, (fp8_mapped[:, None] * fp8_mapped[None, :]).ravel()).reshape(P.shape)
+    xl = bp.quantize_to_levels(ideal)
+    bp_prod = lut[xl[:, None], xl[None, :]] / 10.0
+    print(f"[{tag}] Fig6 mult err: FP8 {np.mean(np.abs(fp8_prod-P))*100:.3f}%  "
+          f"BP10 {np.mean(np.abs(bp_prod-P))*100:.3f}%   (paper: 0.03% / 0.30%)")
+
+    # Fig 7: Frobenius matmul benchmark
+    rng = np.random.default_rng(0)
+    print(f"[{tag}] Fig7 Frobenius rel err (paper: 9.42% @4 ... 1.81% @512):")
+    for N in dims:
+        trials = n_trials if N <= 256 else max(20, n_trials // 5)
+        errs_bp, errs_fp8 = [], []
+        for _ in range(trials):
+            X = rng.random((N, N))
+            Y = rng.random((N, N))
+            A = X @ Y
+            XL, YL = bp.quantize_to_levels(X), bp.quantize_to_levels(Y)
+            # bitplane matmul == AND/popcount accumulate
+            rb = right.bitstreams.astype(np.float64)[XL]   # (N,N,10)
+            lb = left.bitstreams.astype(np.float64)[YL]
+            Ahat = np.einsum("mkp,knp->mn", rb, lb, optimize=True) / 10.0
+            errs_bp.append(np.linalg.norm(A - Ahat) / np.linalg.norm(A))
+            Xq = nearest(fp8_grid, X.ravel()).reshape(X.shape)
+            Yq = nearest(fp8_grid, Y.ravel()).reshape(Y.shape)
+            errs_fp8.append(np.linalg.norm(A - Xq @ Yq) / np.linalg.norm(A))
+        print(f"    N={N:4d}: BP10 {np.mean(errs_bp)*100:6.2f}%   FP8 {np.mean(errs_fp8)*100:5.2f}%")
+
+
+if __name__ == "__main__":
+    right, left = bp.bent_pyramid_datasets()
+    print("right-biased dataset:")
+    print(right)
+    print("left-biased dataset:")
+    print(left)
+    print("LUT (rows=right level a, cols=left level b), target a*b/10:")
+    print(bp.mult_lut(right, left))
+    err = bp.mult_lut(right, left) - np.outer(np.arange(10), np.arange(10)) / 10.0
+    print("LUT error (overlap - ab/10): mean %.4f  mean|.| %.4f  max|.| %.2f"
+          % (err.mean(), np.abs(err).mean(), np.abs(err).max()))
+    run(right, left, "canonical", n_trials=50, dims=(4, 8, 16, 32, 64, 128, 256, 512))

@@ -1,0 +1,45 @@
+"""Quick smoke: every arch (reduced config) runs loss + prefill + decode."""
+import sys
+sys.path.insert(0, "/root/repo/src")
+import traceback
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeConfig
+from repro.launch.inputs import demo_batch
+from repro.models import build
+from repro.models.params import init_tree
+
+SHAPE = ShapeConfig("smoke_train", "train", 64, 2)
+PREFILL = ShapeConfig("smoke_prefill", "prefill", 64, 2)
+
+ok = fail = 0
+for arch in ARCH_IDS:
+    try:
+        cfg = get_config(arch, smoke=True)
+        model = build(cfg)
+        params = init_tree(model.schema(), jax.random.key(0))
+        n = sum(x.size for x in jax.tree.leaves(params))
+        batch = demo_batch(cfg, SHAPE)
+        loss, metrics = jax.jit(model.loss)(params, batch)
+        assert jnp.isfinite(loss), loss
+        # value-and-grad
+        g = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+        gnorm = sum(jnp.sum(x.astype(jnp.float32)**2) for x in jax.tree.leaves(g))
+        assert jnp.isfinite(gnorm), gnorm
+        # prefill + decode
+        pb = demo_batch(cfg, PREFILL)
+        logits, cache = jax.jit(model.prefill, static_argnums=2)(params, pb, 64)
+        assert logits.shape == (2, cfg.vocab_size), logits.shape
+        assert jnp.isfinite(logits).all()
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        logits2, cache = jax.jit(model.decode_step)(params, tok, cache, jnp.int32(64))
+        assert logits2.shape == (2, cfg.vocab_size)
+        assert jnp.isfinite(logits2).all()
+        print(f"OK   {arch:22s} params={n:,} loss={float(loss):.3f} gnorm={float(gnorm):.2e}")
+        ok += 1
+    except Exception as e:
+        print(f"FAIL {arch}: {type(e).__name__}: {e}")
+        traceback.print_exc(limit=6)
+        fail += 1
+print(f"\n{ok} ok, {fail} fail")

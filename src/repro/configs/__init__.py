@@ -1,0 +1,6 @@
+"""Architecture configs (one module per assigned architecture)."""
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig,
+                                get_config, shape_applicable)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeConfig", "get_config",
+           "shape_applicable"]

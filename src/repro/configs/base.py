@@ -1,0 +1,130 @@
+"""Model / shape configuration schema and registry."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # decoder | encdec | hybrid | xlstm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention
+    attention_type: str = "gqa"  # gqa | mla
+    qkv_bias: bool = False
+    window_size: Optional[int] = None        # SWA window (None = full attn)
+    local_global_pattern: int = 0            # N local layers per 1 global
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    logit_softcap: Optional[float] = None
+    # MLA (minicpm3 / deepseek-v2)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # MLP
+    mlp_gated: bool = True
+    act: str = "silu"
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256         # SSD / mLSTM chunk length
+    ssm_decay_bf16: bool = False # store intra-chunk decay matrices in bf16
+    attn_every: int = 0          # zamba2: one shared attn block per N mamba
+    lora_rank: int = 0           # zamba2 shared-block adapters
+    slstm_every: int = 0         # xlstm: one sLSTM per N blocks
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_frames: int = 1500
+    # vlm (paligemma)
+    num_prefix_tokens: int = 0
+    # execution policy
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    param_dtype: str = "bfloat16"
+    matmul_mode: str = "bf16"    # bf16 | bp8 | bp8_lowrank | fp8
+    remat: bool = True
+    scan_layers: bool = True
+    attn_chunk: int = 1024       # KV chunk for memory-efficient attention
+    # ring-buffer KV caches: keep only `window_size` slots per layer.
+    # valid only for uniform-SWA archs (every layer windowed); slots are
+    # addressed pos % window with explicit position masks, so decode is
+    # exact (tests/test_models.py::test_ring_cache_decode).
+    ring_cache: bool = False
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (no full-attention over the whole seq in
+        every layer): SSM/hybrid families, or SWA-dominant transformers."""
+        if self.family in ("hybrid", "xlstm"):
+            return True
+        return self.window_size is not None
+
+    @property
+    def groups(self) -> Tuple[int, int]:
+        """(n_groups, layers_per_group) for scan over heterogeneous stacks."""
+        if self.local_global_pattern:
+            per = self.local_global_pattern + 1
+            assert self.num_layers % per == 0
+            return self.num_layers // per, per
+        if self.attn_every:
+            assert self.num_layers % self.attn_every == 0
+            return self.num_layers // self.attn_every, self.attn_every
+        return self.num_layers, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+ARCH_IDS = (
+    "gemma3_12b", "h2o_danube_1p8b", "minicpm3_4b", "qwen2_72b",
+    "granite_moe_1b", "deepseek_v2_236b", "whisper_base", "paligemma_3b",
+    "zamba2_2p7b", "xlstm_1p3b",
+)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell is runnable; reason if not.
+
+    Per assignment: long_500k is skipped for pure full-attention archs;
+    encoder-only archs have no decode step (none assigned here).
+    """
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k needs sub-quadratic attention"
+    return True, ""

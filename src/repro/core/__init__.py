@@ -1,0 +1,11 @@
+"""Core OISMA / Bent-Pyramid contribution (the paper's technique).
+
+Submodules:
+  bp          — Bent-Pyramid datasets, bitstreams, numpy references
+  bp_matmul   — JAX BP matmul (LUT / bitplane-MXU / low-rank forms)
+  quantize    — BP + FP8(E4M3) quantisers with STE gradients
+  oisma_cost  — OISMA architectural energy/area/throughput model
+"""
+from repro.core import bp, bp_matmul, oisma_cost, quantize
+
+__all__ = ["bp", "bp_matmul", "oisma_cost", "quantize"]

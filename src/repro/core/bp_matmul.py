@@ -1,0 +1,177 @@
+"""Bent-Pyramid matrix multiplication in JAX.
+
+Three mathematically related implementations of the OISMA MatMul
+(quantise -> in-array stochastic multiply -> accumulation periphery):
+
+  * ``bp_matmul_lut``      — one-hot LUT contraction.  Direct transcription
+    of the 10x10 quasi-stochastic product table; the correctness oracle.
+  * ``bp_matmul_bitplane`` — popcount(AND(x_bits, y_bits)) expressed as a
+    sum of bitplane matmuls: because popcount(AND(u, v)) == <u, v> for 0/1
+    vectors,  C = sum_p X_p @ Y_p,  which maps the in-array AND onto the
+    TPU MXU (see DESIGN.md §Hardware-adaptation).  The bitplanes are
+    concatenated along the contraction axis so the whole MatMul is ONE
+    MXU matmul with an 8x-wide inner dimension.
+  * ``bp_matmul_lowrank``  — beyond-paper optimisation: the product LUT is
+    factored exactly as T = L @ R^T with rank r = rank(T) <= 8, giving
+    C = (L[x]) @ (R[y])^T with only an r-wide (instead of 8-wide) inner
+    blow-up.  Bit-exact up to float assoc (validated in tests).
+
+All support the signed/scaled extension: for x = sx*|x|, y = sy*|y| the
+product sign factors out per element, so sign-carrying bitplanes in
+{-1, 0, 1} flow through the same matmuls.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bp
+from repro.core.quantize import BPQuantized, quantize_bp
+
+EFFECTIVE_BITS = bp.EFFECTIVE_BITS  # 8 (BP8 compressed hardware interpretation)
+
+
+@functools.lru_cache(None)
+def _tables() -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(right_bitplanes[10,8], left_bitplanes[10,8], lut[10,10]) as numpy."""
+    right, left = bp.bent_pyramid_datasets()
+    return (
+        right.bitstreams_bp8.astype(np.float32),
+        left.bitstreams_bp8.astype(np.float32),
+        bp.mult_lut(right, left).astype(np.float32),
+    )
+
+
+@functools.lru_cache(None)
+def lut_factors(tol: float = 1e-6,
+                rank: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Low-rank factorisation of the product LUT.
+
+    Returns (L[10,r], R[10,r], r) with L @ R.T == lut to float precision
+    when ``rank`` is None (exact rank, 8 for the canonical datasets).
+    Passing ``rank`` truncates the SVD: the spectrum is dominated by the
+    separable a*b/10 structure (sigma_1 ~ 28 vs sigma_2 ~ 1.9), so even
+    rank 3 keeps the 512x512 Frobenius error at 1.70% vs 1.66% exact —
+    below the paper's 1.81% (EXPERIMENTS.md §Perf C)."""
+    lut = _tables()[2].astype(np.float64)
+    u, s, vt = np.linalg.svd(lut)
+    r = int((s > s[0] * tol).sum()) if rank is None else int(rank)
+    L = u[:, :r] * np.sqrt(s[:r])
+    R = (vt[:r, :].T) * np.sqrt(s[:r])
+    return L.astype(np.float32), R.astype(np.float32), r
+
+
+def lut_rank() -> int:
+    return lut_factors()[2]
+
+
+# ---------------------------------------------------------------------------
+# Level-domain matmuls (unsigned, levels in 0..9)
+# ---------------------------------------------------------------------------
+
+def bp_matmul_lut(x_levels: jax.Array, y_levels: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Oracle: C[m,n] = sum_k LUT[x[m,k], y[k,n]] / 10 via one-hot."""
+    lut = jnp.asarray(_tables()[2], dtype=dtype)
+    xoh = jax.nn.one_hot(x_levels, bp.NUM_LEVELS, dtype=dtype)   # (M,K,10)
+    yoh = jax.nn.one_hot(y_levels, bp.NUM_LEVELS, dtype=dtype)   # (K,N,10)
+    return jnp.einsum("mka,knb,ab->mn", xoh, yoh, lut) / 10.0
+
+
+def encode_bitplanes(levels: jax.Array, which: str, dtype=jnp.bfloat16) -> jax.Array:
+    """(..., ) int levels -> (..., 8) 0/1 bitplanes for the given dataset."""
+    table = _tables()[0] if which == "right" else _tables()[1]
+    return jnp.asarray(table, dtype=dtype)[levels]
+
+
+def bp_matmul_bitplane(x_levels: jax.Array, y_levels: jax.Array,
+                       dtype=jnp.bfloat16, out_dtype=jnp.float32) -> jax.Array:
+    """C = sum_p X_p @ Y_p, folded into one matmul of 8x inner width."""
+    m, k = x_levels.shape
+    k2, n = y_levels.shape
+    assert k == k2
+    xb = encode_bitplanes(x_levels, "right", dtype)              # (M,K,8)
+    yb = encode_bitplanes(y_levels, "left", dtype)               # (K,N,8)
+    xw = xb.reshape(m, k * EFFECTIVE_BITS)                       # (M, 8K)
+    yw = yb.transpose(0, 2, 1).reshape(k * EFFECTIVE_BITS, n)    # (8K, N)
+    return jnp.matmul(xw, yw, preferred_element_type=out_dtype) / 10.0
+
+
+def bp_matmul_lowrank(x_levels: jax.Array, y_levels: jax.Array,
+                      dtype=jnp.float32, out_dtype=jnp.float32,
+                      rank: Optional[int] = None) -> jax.Array:
+    """C = (L[x]) @ (R[y])^T / 10 with r = rank(LUT) inner blow-up."""
+    L, R, r = lut_factors(rank=rank)
+    m, k = x_levels.shape
+    _, n = y_levels.shape
+    xl = jnp.asarray(L, dtype=dtype)[x_levels]                   # (M,K,r)
+    yr = jnp.asarray(R, dtype=dtype)[y_levels]                   # (K,N,r)
+    xw = xl.reshape(m, k * r)
+    yw = yr.transpose(0, 2, 1).reshape(k * r, n)
+    return jnp.matmul(xw, yw, preferred_element_type=out_dtype) / 10.0
+
+
+# ---------------------------------------------------------------------------
+# Signed/scaled real-tensor entry points (the form models consume)
+# ---------------------------------------------------------------------------
+
+def bp_matmul(x: jax.Array, y: jax.Array, *, impl: str = "bitplane",
+              accum_dtype=jnp.float32) -> jax.Array:
+    """OISMA-simulated matmul of real matrices (2D): x @ y approximately.
+
+    Quantises both operands to signed BP8 (per-tensor scale), performs the
+    quasi-stochastic multiply bit-exactly, and rescales.  ``impl`` is one of
+    'lut' | 'bitplane' | 'lowrank'.
+    """
+    qx: BPQuantized = quantize_bp(x)
+    qy: BPQuantized = quantize_bp(y)
+    sx = qx.sign.astype(accum_dtype)
+    sy = qy.sign.astype(accum_dtype)
+    if impl == "lut":
+        # signs via one-hot weighting
+        lut = jnp.asarray(_tables()[2], dtype=accum_dtype)
+        xoh = jax.nn.one_hot(qx.levels, bp.NUM_LEVELS, dtype=accum_dtype) * sx[..., None]
+        yoh = jax.nn.one_hot(qy.levels, bp.NUM_LEVELS, dtype=accum_dtype) * sy[..., None]
+        c = jnp.einsum("mka,knb,ab->mn", xoh, yoh, lut) / 10.0
+    elif impl == "bitplane":
+        xb = encode_bitplanes(qx.levels, "right", accum_dtype) * sx[..., None]
+        yb = encode_bitplanes(qy.levels, "left", accum_dtype) * sy[..., None]
+        m, k = qx.levels.shape
+        n = qy.levels.shape[1]
+        xw = xb.reshape(m, k * EFFECTIVE_BITS)
+        yw = yb.transpose(0, 2, 1).reshape(k * EFFECTIVE_BITS, n)
+        c = jnp.matmul(xw, yw, preferred_element_type=accum_dtype) / 10.0
+    elif impl == "lowrank":
+        L, R, r = lut_factors()
+        xl = jnp.asarray(L, dtype=accum_dtype)[qx.levels] * sx[..., None]
+        yr = jnp.asarray(R, dtype=accum_dtype)[qy.levels] * sy[..., None]
+        m, k = qx.levels.shape
+        n = qy.levels.shape[1]
+        xw = xl.reshape(m, k * r)
+        yw = yr.transpose(0, 2, 1).reshape(k * r, n)
+        c = jnp.matmul(xw, yw, preferred_element_type=accum_dtype) / 10.0
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return c * (qx.scale * qy.scale)
+
+
+def bp_matmul_ste(x: jax.Array, y: jax.Array, *, impl: str = "bitplane") -> jax.Array:
+    """BP matmul with straight-through gradients (OISMA-aware training)."""
+
+    @jax.custom_vjp
+    def _f(x, y):
+        return bp_matmul(x, y, impl=impl)
+
+    def _fwd(x, y):
+        return _f(x, y), (x, y)
+
+    def _bwd(res, g):
+        x, y = res
+        return (g @ y.T).astype(x.dtype), (x.T @ g).astype(y.dtype)
+
+    _f.defvjp(_fwd, _bwd)
+    return _f(x, y)

@@ -1,0 +1,157 @@
+"""Quantisation formats used by the OISMA reproduction.
+
+Implements, in JAX:
+
+  * BP10/BP8 Bent-Pyramid quantisation (the paper's format): values are
+    mapped to one of ten probability levels 0.0..0.9.  Signed tensors use a
+    sign-magnitude extension with a per-tensor (or per-axis) scale — the
+    paper evaluates unsigned [0,1] data only; the signed extension is ours
+    (DESIGN.md §Beyond-paper).
+  * FP8 E4M3 (the paper's comparison baseline, Sec. III) via round-to-
+    nearest value mapping.
+
+All functions are jit-safe and differentiable where it makes sense via
+straight-through estimators (STE).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bp
+
+NUM_LEVELS = bp.NUM_LEVELS
+
+
+# ---------------------------------------------------------------------------
+# FP8 (E4M3) — the paper's baseline format
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(None)
+def e4m3_positive_values(max_val: float = 448.0) -> np.ndarray:
+    """All positive finite E4M3 values <= max_val (ascending)."""
+    vals = set()
+    for E in range(16):
+        for M in range(8):
+            if E == 15 and M == 7:
+                continue  # NaN encoding
+            v = (M / 8.0) * 2.0 ** (-6) if E == 0 else (1 + M / 8.0) * 2.0 ** (E - 7)
+            if 0.0 < v <= max_val:
+                vals.add(v)
+    return np.array(sorted(vals))
+
+
+@functools.lru_cache(None)
+def _e4m3_grid_and_mids(max_val: float) -> Tuple[np.ndarray, np.ndarray]:
+    grid = np.concatenate([[0.0], e4m3_positive_values(max_val)])
+    mids = (grid[1:] + grid[:-1]) / 2.0
+    return grid, mids
+
+
+def quantize_e4m3(x: jax.Array, max_val: float = 448.0) -> jax.Array:
+    """Round |x| to the nearest E4M3-representable magnitude (sign kept).
+
+    Out-of-range magnitudes clip to ``max_val``.
+    """
+    grid, mids = _e4m3_grid_and_mids(max_val)
+    g = jnp.asarray(grid, dtype=x.dtype)
+    m = jnp.asarray(mids, dtype=x.dtype)
+    mag = jnp.abs(x)
+    idx = jnp.searchsorted(m, jnp.minimum(mag, grid[-1]))
+    return jnp.sign(x) * g[idx]
+
+
+# ---------------------------------------------------------------------------
+# Bent-Pyramid quantisation
+# ---------------------------------------------------------------------------
+
+def quantize_bp_levels(x01: jax.Array) -> jax.Array:
+    """Map values in [0, 1] to the nearest BP level (int32 in 0..9).
+
+    The paper's data-mapping phase (Fig. 5): nearest of {0.0, 0.1, .., 0.9};
+    values above 0.95 clip to level 9.
+    """
+    return jnp.clip(jnp.round(x01 * 10.0), 0, NUM_LEVELS - 1).astype(jnp.int32)
+
+
+def bp_dequantize(levels: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return levels.astype(dtype) / 10.0
+
+
+@jax.tree_util.register_pytree_node_class
+class BPQuantized:
+    """Sign-magnitude BP representation of a real tensor.
+
+    value ~= sign * (level / 10) * scale, with scale broadcast along
+    the quantisation axes.
+    """
+
+    def __init__(self, levels: jax.Array, sign: jax.Array, scale: jax.Array):
+        self.levels = levels
+        self.sign = sign
+        self.scale = scale
+
+    def tree_flatten(self):
+        return (self.levels, self.sign, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return (self.sign.astype(dtype) * self.levels.astype(dtype) / 10.0) * self.scale.astype(dtype)
+
+    @property
+    def shape(self):
+        return self.levels.shape
+
+
+def quantize_bp(x: jax.Array, axis=None) -> BPQuantized:
+    """Quantise a real tensor to signed BP with max-|x| scaling.
+
+    ``axis``: axes reduced to compute the scale (None = per-tensor).
+    """
+    mag = jnp.abs(x)
+    scale = jnp.max(mag, axis=axis, keepdims=True)
+    scale = jnp.maximum(scale, jnp.finfo(x.dtype).tiny)
+    levels = quantize_bp_levels(mag / scale)
+    sign = jnp.sign(x).astype(jnp.int8)
+    return BPQuantized(levels.astype(jnp.int8), sign, scale)
+
+
+def fake_quantize_bp(x: jax.Array, axis=None) -> jax.Array:
+    """Quantise-dequantise through BP (differentiable via STE)."""
+
+    @jax.custom_vjp
+    def _ste(x):
+        return quantize_bp(x, axis=axis).dequantize(x.dtype)
+
+    def _fwd(x):
+        return _ste(x), None
+
+    def _bwd(_, g):
+        return (g,)
+
+    _ste.defvjp(_fwd, _bwd)
+    return _ste(x)
+
+
+def fake_quantize_e4m3(x: jax.Array, max_val: float = 448.0) -> jax.Array:
+    """Quantise-dequantise through FP8 E4M3 with an STE gradient."""
+
+    @jax.custom_vjp
+    def _q(x):
+        return quantize_e4m3(x, max_val)
+
+    def _fwd(x):
+        return _q(x), None
+
+    def _bwd(_, g):
+        return (g,)
+
+    _q.defvjp(_fwd, _bwd)
+    return _q(x)

@@ -1,0 +1,198 @@
+"""Pallas TPU kernel for the Bent-Pyramid (OISMA) matmul.
+
+Hardware adaptation (DESIGN.md §Hardware-adaptation): OISMA performs the
+quasi-stochastic multiply *inside* a 1T1R memory array (a read that ANDs the
+broadcast input bit against the stored bit) and accumulates the output
+bitstreams in a digital periphery of parallel counters + adder trees.  On
+TPU the idiomatic equivalent keeps both halves but maps them onto the
+VMEM/MXU hierarchy:
+
+  * the "on-the-fly" bitstream generation (single-cycle BP encode) becomes
+    an on-the-fly VMEM expansion of int8 level codes into sign-carrying
+    bitplanes — done *inside* the kernel so the 8x-expanded operands never
+    touch HBM;
+  * the in-array AND + popcount + adder tree becomes one MXU matmul over
+    the bitplane-expanded operands: popcount(AND(u, v)) == <u, v> for 0/1
+    vectors, and the systolic MXU performs the accumulation tree.
+
+Tiling: grid (M/bm, N/bn, K/bk), fp32 accumulation in the output tile across
+the K grid dimension.  The expanded tiles are (bm, 8*bk) and (8*bk, bn) —
+the MXU inner dimension is 8x the logical K tile, so bk defaults to 128
+giving a 1024-wide MXU contraction (8 x 128-aligned).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import bp
+
+BITS = bp.EFFECTIVE_BITS  # 8
+
+
+@functools.lru_cache(None)
+def _plane_tables() -> Tuple[np.ndarray, np.ndarray]:
+    right, left = bp.bent_pyramid_datasets()
+    return (right.bitstreams_bp8.astype(np.float32),
+            left.bitstreams_bp8.astype(np.float32))
+
+
+@functools.lru_cache(None)
+def _plane_thresholds(which: str) -> Tuple[int, ...]:
+    """Per-bit level thresholds exploiting the nested-pyramid structure.
+
+    Because level n+1's block strictly contains level n's, bit position p is
+    set iff level >= threshold[p].  This turns the bitstream encode into 8
+    scalar comparisons — no table lookups inside the kernel.
+    """
+    table = _plane_tables()[0 if which == "right" else 1]
+    thresh = []
+    for p in range(BITS):
+        levels_set = [l for l in range(bp.NUM_LEVELS) if table[l, p]]
+        t = min(levels_set) if levels_set else bp.NUM_LEVELS
+        # nestedness check: the set of levels covering bit p must be a
+        # suffix of 0..9
+        assert levels_set == list(range(t, bp.NUM_LEVELS)), (which, p)
+        thresh.append(t)
+    return tuple(thresh)
+
+
+def _expand_planes(codes, which: str, compute_dtype):
+    """(bm, bk) int8 sign*level codes -> (bm, bk, 8) signed bitplanes.
+
+    plane_p = sign(code) * (|code| >= threshold_p); thresholds are Python
+    scalars baked into the kernel, so no constant arrays are captured.
+    """
+    thresh = _plane_thresholds(which)
+    lvl = jnp.abs(codes).astype(jnp.int32)
+    sgn = jnp.sign(codes).astype(compute_dtype)
+    planes = [(lvl >= t).astype(compute_dtype) for t in thresh]
+    return jnp.stack(planes, axis=-1) * sgn[..., None]
+
+
+def _bp_matmul_kernel(x_ref, y_ref, out_ref, *, n_k: int, compute_dtype):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xp = _expand_planes(x_ref[...], "right", compute_dtype)   # (bm, bk, 8)
+    yp = _expand_planes(y_ref[...], "left", compute_dtype)    # (bk, bn, 8)
+    bm, bk, _ = xp.shape
+    bn = yp.shape[1]
+    xw = xp.reshape(bm, bk * BITS)
+    yw = yp.transpose(0, 2, 1).reshape(bk * BITS, bn)
+    out_ref[...] += jnp.dot(xw, yw, preferred_element_type=jnp.float32)
+
+
+def bp_matmul_pallas(x_codes: jax.Array, y_codes: jax.Array,
+                     *, block_m: int = 128, block_n: int = 128,
+                     block_k: int = 128, compute_dtype=jnp.float32,
+                     interpret: bool | None = None) -> jax.Array:
+    """Signed BP8 matmul on level codes via Pallas.
+
+    ``x_codes``: (M, K) int8 in [-9, 9] (sign * level, right-biased operand)
+    ``y_codes``: (K, N) int8 in [-9, 9] (left-biased operand)
+    Returns the integer accumulation as float32 (callers divide by 10 and
+    apply tensor scales).  Shapes must be multiples of the block sizes
+    (ops.py pads).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, k = x_codes.shape
+    k2, n = y_codes.shape
+    assert k == k2, (x_codes.shape, y_codes.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, k, n), (block_m, block_k, block_n))
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+    kernel = functools.partial(_bp_matmul_kernel, n_k=n_k,
+                               compute_dtype=compute_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x_codes, y_codes)
+
+
+def _popcount_kernel(bits_ref, out_ref):
+    """Accumulation-periphery kernel: per-row popcount of a 0/1 tile.
+
+    Mirrors the 16->5 / 64->7 / 256->9 parallel-counter + adder-tree
+    structure as a tree reduction over the column axis.
+    """
+    tile = bits_ref[...].astype(jnp.int32)        # (bm, 256)
+    # tree reduction in halves (the adder-tree structure)
+    width = tile.shape[-1]
+    while width > 1:
+        half = width // 2
+        tile = tile[..., :half] + tile[..., half:width]
+        width = half
+    out_ref[...] = tile[..., 0][..., None]
+
+
+def popcount_accumulate_pallas(bits: jax.Array, *, block_rows: int = 256,
+                               interpret: bool | None = None) -> jax.Array:
+    """(R, C) 0/1 bits -> (R,) int32 row sums via a Pallas tree-adder."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    r, c = bits.shape
+    assert r % block_rows == 0 and (c & (c - 1)) == 0, (r, c)
+    out = pl.pallas_call(
+        _popcount_kernel,
+        grid=(r // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        interpret=interpret,
+    )(bits)
+    return out[:, 0]
+
+
+def _bp_quantize_kernel(x_ref, scale_ref, codes_ref):
+    """Quantise a real tile to signed BP level codes.
+
+    The hardware analogue is the paper's single-cycle BP number generation:
+    values arrive, levels leave.  codes = sign(x) * clip(round(|x|/s*10),0,9)
+    with the per-tensor scale s broadcast from a (1,1) operand.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    s = scale_ref[0, 0].astype(jnp.float32)
+    lvl = jnp.clip(jnp.round(jnp.abs(x) * (10.0 / s)), 0.0,
+                   float(bp.NUM_LEVELS - 1))
+    codes_ref[...] = (jnp.sign(x) * lvl).astype(jnp.int8)
+
+
+def bp_quantize_pallas(x: jax.Array, scale: jax.Array, *,
+                       block_m: int = 256, block_n: int = 256,
+                       interpret: bool | None = None) -> jax.Array:
+    """(M, N) f32 + scalar scale -> (M, N) int8 sign*level codes."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = x.shape
+    assert m % block_m == 0 and n % block_n == 0, (x.shape, block_m, block_n)
+    s = jnp.reshape(scale.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _bp_quantize_kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=interpret,
+    )(x, s)

@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``oisma_matmul`` is the end-to-end entry point the model zoo dispatches to
+when a layer runs in ``matmul_mode='bp8'``: quantise -> level codes ->
+Pallas bitplane matmul -> rescale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import quantize_bp
+from repro.kernels import bp_matmul as _k
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def to_codes(q) -> jax.Array:
+    """BPQuantized -> int8 sign*level codes."""
+    return (q.sign.astype(jnp.int8) * q.levels.astype(jnp.int8))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def bp_matmul_codes(x_codes: jax.Array, y_codes: jax.Array,
+                    block_m: int = 128, block_n: int = 128,
+                    block_k: int = 128, interpret: bool | None = None) -> jax.Array:
+    """Padded/unpadded wrapper over the Pallas kernel (integer result)."""
+    m, k = x_codes.shape
+    n = y_codes.shape[1]
+    bm = min(block_m, _next_mult(m, 8))
+    bn = min(block_n, _next_mult(n, 128))
+    bk = min(block_k, _next_mult(k, 128))
+    xp = _pad_to(x_codes, bm, bk)
+    yp = _pad_to(y_codes, bk, bn)
+    out = _k.bp_matmul_pallas(xp, yp, block_m=bm, block_n=bn, block_k=bk,
+                              interpret=interpret)
+    return out[:m, :n]
+
+
+def _next_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def oisma_matmul(x: jax.Array, y: jax.Array, *, interpret: bool | None = None,
+                 block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128) -> jax.Array:
+    """OISMA-simulated x @ y for real 2-D operands (signed, scaled)."""
+    qx = quantize_bp(x)
+    qy = quantize_bp(y)
+    acc = bp_matmul_codes(to_codes(qx), to_codes(qy), block_m=block_m,
+                          block_n=block_n, block_k=block_k,
+                          interpret=interpret)
+    return (acc / 10.0) * (qx.scale * qy.scale).astype(acc.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def popcount_accumulate(bits: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """Row-popcount via the accumulation-periphery kernel (padded)."""
+    r, c = bits.shape
+    rp = _next_mult(r, 256)
+    cp = 1 << max(0, (c - 1).bit_length())
+    padded = jnp.zeros((rp, cp), bits.dtype).at[:r, :c].set(bits)
+    return _k.popcount_accumulate_pallas(padded, interpret=interpret)[:r]

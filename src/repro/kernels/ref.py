@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These implement the OISMA hardware semantics literally:
+
+  * ``bp_matmul_ref`` — for every (i, k, j): encode x[i,k] with the
+    right-biased dataset and y[k,j] with the left-biased dataset, AND the
+    two 8-bit BP8 bitstreams (the in-array operation), popcount the result
+    (the parallel counters), and accumulate in binary (the adder trees).
+    Signs multiply; the result is scaled by 1/10 per the compressed BP8
+    interpretation.
+  * ``popcount_accumulate_ref`` — the accumulation periphery: per-row sum
+    of a 0/1 bit matrix (256-bit SC input -> 9-bit binary output).
+
+They are deliberately simple and allocation-heavy; the kernels must match
+them bit-for-bit (integer results) before scaling.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bp
+
+
+def _tables():
+    right, left = bp.bent_pyramid_datasets()
+    return (right.bitstreams_bp8.astype(np.int32),
+            left.bitstreams_bp8.astype(np.int32))
+
+
+def bp_matmul_ref(x_codes: jnp.ndarray, y_codes: jnp.ndarray) -> jnp.ndarray:
+    """Signed BP8 matmul oracle on level codes.
+
+    ``codes`` are int8 sign*level values in [-9, 9].  Returns the integer
+    accumulation (before the 1/10 output scaling), as float32.
+    """
+    rtab, ltab = _tables()
+    xl = jnp.abs(x_codes).astype(jnp.int32)
+    yl = jnp.abs(y_codes).astype(jnp.int32)
+    sx = jnp.sign(x_codes).astype(jnp.int32)
+    sy = jnp.sign(y_codes).astype(jnp.int32)
+    xb = jnp.asarray(rtab)[xl]          # (M, K, 8) bitstreams
+    yb = jnp.asarray(ltab)[yl]          # (K, N, 8)
+    # the in-array AND + popcount, element pair by element pair:
+    and_bits = xb[:, :, None, :] * yb[None, :, :, :]      # (M, K, N, 8)
+    pops = and_bits.sum(-1)                                # parallel counters
+    signed = pops * sx[:, :, None] * sy[None, :, :]
+    return signed.sum(1).astype(jnp.float32)               # adder trees over K
+
+
+def popcount_accumulate_ref(bits: jnp.ndarray) -> jnp.ndarray:
+    """Accumulation periphery oracle: row-sum of 0/1 bits -> binary."""
+    return bits.astype(jnp.int32).sum(-1)
+
+
+def bp_quantize_ref(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the quantisation kernel (matches repro.core.quantize)."""
+    lvl = jnp.clip(jnp.round(jnp.abs(x) / scale * 10.0), 0, 9)
+    return (jnp.sign(x) * lvl).astype(jnp.int8)

@@ -1,0 +1,310 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers train_step /
+serve_step against ShapeDtypeStruct inputs with the production shardings,
+compiles, and records memory_analysis / cost_analysis / collective traffic
+for the roofline tables.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3_12b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+# MUST be the very first lines, before ANY other import (jax locks the
+# device count on first init).  Do NOT set this anywhere else.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding as shd
+from repro.launch.inputs import batch_axes, input_specs
+from repro.launch.mesh import make_production_mesh, mesh_axis_size
+from repro.models import build
+from repro.models.params import abstract_tree, axes_tree
+from repro.optim.optimizer import (OptimizerConfig, abstract_opt_state,
+                                   opt_state_axes)
+from repro.roofline.analysis import (RooflineTerms, collective_bytes,
+                                     model_flops_estimate)
+from repro.train.train_step import TrainPlan, make_train_step
+
+
+def _opt_config(cfg: ModelConfig) -> OptimizerConfig:
+    big = cfg.num_layers * cfg.d_model * cfg.d_model > 60 * 4096 * 4096
+    return OptimizerConfig(
+        moment_dtype=jnp.bfloat16 if big else jnp.float32)
+
+
+def _rules_for(shape: ShapeConfig, mesh, preset: str = "default") -> shd.Rules:
+    if preset != "default":
+        return shd.RULE_PRESETS[preset]()
+    if shape.kind == "train":
+        return shd.train_rules()
+    if shape.kind == "prefill":
+        return shd.prefill_rules()
+    return shd.decode_rules(shape.global_batch, mesh_axis_size(mesh, "data"))
+
+
+#: reduced shapes for --smoke mode (structure-identical, fast compile)
+SMOKE_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 128, 32),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 256, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 256, 32),
+    "long_500k": ShapeConfig("long_500k", "decode", 2048, 1),
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None,
+               compile_only: bool = True, smoke: bool = False,
+               rules_preset: str = "default",
+               mesh_shape: Optional[str] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the roofline record.
+
+    ``mesh_shape`` ("data,model", e.g. "64,4") reshapes the 256 chips/pod
+    for §Perf sharding experiments; the canonical dry-run keeps 16x16.
+    """
+    cfg = get_config(arch, smoke=smoke)
+    if overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **overrides)
+    shape = (SMOKE_SHAPES if smoke else SHAPES)[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    if mesh_shape:
+        dd, mm = (int(v) for v in mesh_shape.split(","))
+        assert dd * mm == 256, "per-pod chip count is fixed at 256"
+        if multi_pod:
+            mesh = jax.make_mesh((2, dd, mm), ("pod", "data", "model"))
+        else:
+            mesh = jax.make_mesh((dd, mm), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = _rules_for(shape, mesh, rules_preset)
+    model = build(cfg)
+    schema = model.schema()
+    aparams = abstract_tree(schema)
+    paxes = axes_tree(schema)
+    params_sh = shd.tree_shardings(mesh, rules, aparams, paxes)
+
+    abatch = input_specs(cfg, shape)
+    baxes = batch_axes(cfg, shape)
+    batch_sh = jax.tree.map(
+        lambda av, ax: shd.named_sharding(mesh, rules, av.shape, ax),
+        abatch, baxes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    t0 = time.time()
+    with shd.use_rules(mesh, rules):
+        if shape.kind == "train":
+            opt_cfg = _opt_config(cfg)
+            astate = {"params": aparams,
+                      "opt": abstract_opt_state(aparams, opt_cfg)}
+            saxes = {"params": paxes, "opt": opt_state_axes(paxes)}
+            state_sh = shd.tree_shardings(mesh, rules, astate, saxes)
+            plan = TrainPlan.for_shape(cfg, shape,
+                                       mesh_axis_size(mesh, "data") *
+                                       mesh_axis_size(mesh, "pod"))
+            step = make_train_step(model, opt_cfg, plan)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(astate, abatch)
+        elif shape.kind == "prefill":
+            fn = functools.partial(model.prefill, cache_len=shape.seq_len)
+            acache = model.cache_spec(shape.global_batch,
+                                      shape.seq_len + cfg.num_prefix_tokens)
+            caxes = model.cache_axes(shape.global_batch, shape.seq_len)
+            cache_sh = shd.tree_shardings(mesh, rules, acache, caxes)
+            jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                             out_shardings=(None, cache_sh))
+            lowered = jitted.lower(aparams, abatch)
+        else:  # decode
+            cache_len = shape.seq_len + cfg.num_prefix_tokens
+            acache = model.cache_spec(shape.global_batch, cache_len)
+            caxes = model.cache_axes(shape.global_batch, cache_len)
+            cache_sh = shd.tree_shardings(mesh, rules, acache, caxes)
+            apos = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(model.decode_step,
+                             in_shardings=(params_sh, batch_sh["tokens"],
+                                           cache_sh, None),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(aparams, abatch["tokens"], acache, apos)
+        t_lower = time.time() - t0
+        record: Dict[str, Any] = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "chips": chips, "t_lower_s": round(t_lower, 1),
+        }
+        if overrides:
+            record["overrides"] = {k: str(v) for k, v in overrides.items()}
+        if not compile_only:
+            record["status"] = "lowered"
+            return record
+        t0 = time.time()
+        compiled = lowered.compile()
+        record["t_compile_s"] = round(time.time() - t0, 1)
+
+    # memory_analysis reports PER-DEVICE sizes for the partitioned module
+    mem = compiled.memory_analysis()
+    arg_b = int(getattr(mem, "argument_size_in_bytes", 0))
+    out_b = int(getattr(mem, "output_size_in_bytes", 0))
+    tmp_b = int(getattr(mem, "temp_size_in_bytes", 0))
+    record["memory"] = {
+        "argument_bytes_per_device": arg_b,
+        "output_bytes_per_device": out_b,
+        "temp_bytes_per_device": tmp_b,
+        "xla_peak_bytes_per_device": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        # CPU-backend temp lacks TPU liveness optimisation; report args+temp
+        # as the pessimistic bound, xla_peak as XLA's own estimate.
+        "peak_bytes_per_device": arg_b + tmp_b,
+    }
+    # raw XLA numbers (cross-check only: while-loop bodies counted once)
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, default_group=chips)
+    record["xla_raw"] = {"flops_per_device": flops, "hbm_bytes_per_device": hbm,
+                         "collectives": coll}
+
+    # analytic roofline terms (exact matmul counts; see repro.roofline.model)
+    from repro.roofline.model import MeshSpec, analytic_cell
+    dd = mesh_axis_size(mesh, "data")
+    mm = mesh_axis_size(mesh, "model")
+    if rules_preset == "dp_only":  # model axis acts as extra data parallelism
+        dd, mm = dd * mm, 1
+    mesh_spec = MeshSpec(pod=2 if multi_pod else 1, data=dd, model=mm)
+    accum = 1
+    moment_bytes = 4
+    if shape.kind == "train":
+        accum = TrainPlan.for_shape(cfg, shape, mesh_spec.dp).accum_steps
+        moment_bytes = 2 if _opt_config(cfg).moment_dtype == jnp.bfloat16 else 4
+    cell = analytic_cell(cfg, shape, mesh_spec, accum=accum,
+                         remat=cfg.remat and shape.kind == "train",
+                         moment_bytes=moment_bytes)
+    record["roofline"] = cell["terms"].as_dict()
+    record["roofline"]["flops_breakdown"] = cell["flops"]
+    record["roofline"]["hbm_breakdown"] = cell["hbm"]
+    record["roofline"]["coll_breakdown"] = cell["coll"]
+    record["status"] = "ok"
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides key=value (e.g. matmul_mode=bp8)")
+    ap.add_argument("--cell-timeout", type=int, default=2400)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs/shapes (CI; same code paths)")
+    ap.add_argument("--rules", default="default",
+                    help="sharding rules preset (default | dp_only)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="data,model reshape of the 256 chips/pod (e.g. 64,4)")
+    args = ap.parse_args()
+
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    for arch in archs:
+        for shape in shapes:
+            for m in meshes:
+                cells.append((arch, shape, m == "multi"))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"],
+             json.dumps(r.get("overrides", {}), sort_keys=True))
+            for r in results}
+
+    for arch, shape, multi in cells:
+        key = (arch, shape, "multi" if multi else "single",
+               json.dumps({k: str(v) for k, v in overrides.items()},
+                          sort_keys=True))
+        if key in done:
+            print(f"[skip-done] {key}")
+            continue
+        print(f"[cell] {arch} x {shape} x {'multi' if multi else 'single'}",
+              flush=True)
+        try:
+            import signal
+
+            def _alarm(signum, frame):
+                raise TimeoutError(f"cell exceeded {args.cell_timeout}s")
+
+            signal.signal(signal.SIGALRM, _alarm)
+            signal.alarm(args.cell_timeout)
+            try:
+                rec = lower_cell(arch, shape, multi, overrides or None,
+                                 compile_only=not args.lower_only,
+                                 smoke=args.smoke, rules_preset=args.rules,
+                                 mesh_shape=args.mesh_shape)
+                if args.rules != "default":
+                    rec["rules"] = args.rules
+                if args.mesh_shape:
+                    rec["mesh_shape"] = args.mesh_shape
+            finally:
+                signal.alarm(0)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "multi" if multi else "single",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        if overrides:
+            rec.setdefault("overrides",
+                           {k: str(v) for k, v in overrides.items()})
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        status = rec.get("status")
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" bottleneck={r['bottleneck']}"
+                     f" frac={r['roofline_fraction']:.3f}"
+                     f" tc={r['t_compute']:.4f} tm={r['t_memory']:.4f}"
+                     f" tcoll={r['t_collective']:.4f}")
+        elif status == "error":
+            extra = " " + rec["error"][:200]
+        print(f"  -> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Input specifications per (architecture x shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) — the dry-run lowers
+against these.  ``demo_batch`` materialises small random instances of the
+same structure for smoke tests and examples.
+
+Modality frontends are STUBS per the assignment: whisper receives
+precomputed frame embeddings (B, frames, d_model); paligemma receives
+precomputed patch embeddings (B, 256, d_model).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Logical sharding axes for each batch leaf."""
+    ax: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        ax["tokens"] = ("batch", "seq")
+        if shape.kind == "train":
+            ax["labels"] = ("batch", "seq")
+            ax["loss_mask"] = ("batch", "seq")
+    else:
+        ax["tokens"] = ("batch", None)
+    if cfg.family == "encdec":
+        if shape.kind != "decode":
+            ax["frames"] = ("batch", "frames", None)
+    if cfg.num_prefix_tokens and shape.kind != "decode":
+        ax["patches"] = ("batch", None, None)
+    return ax
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract batch for the given shape (decode cache specs are separate,
+    via model.cache_spec)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["loss_mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode: one new token against a cache of length s
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), bf16)
+    if cfg.num_prefix_tokens and shape.kind != "decode":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_tokens, cfg.d_model), bf16)
+    return out
+
+
+def demo_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> Dict[str, Any]:
+    """Concrete random batch matching input_specs (for smoke/examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, spec in input_specs(cfg, shape).items():
+        if spec.dtype == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, spec.shape, dtype=np.int32))
+        elif k == "loss_mask":
+            out[k] = jnp.ones(spec.shape, jnp.float32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(spec.shape), spec.dtype)
+    return out

@@ -1,0 +1,72 @@
+"""Training launcher CLI.
+
+On this (CPU) container it drives reduced configs end-to-end; on real
+hardware the same entry point takes the full configs — the mesh/sharding
+plumbing is identical to what the dry-run compiles at 256/512 chips.
+
+  python -m repro.launch.train --arch h2o_danube_1p8b --steps 100 \
+      --ckpt-dir /tmp/ckpt --matmul-mode bp8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o_danube_1p8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--matmul-mode", default="bf16",
+                    choices=["bf16", "bp8", "bp8_lowrank", "fp8"])
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (not smoke) architecture config")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (FT demo)")
+    ap.add_argument("--metrics", default=None,
+                    help="JSONL telemetry path (repro.utils.metrics)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.models import build
+    from repro.optim.optimizer import OptimizerConfig
+    from repro.runtime.fault_tolerance import FailureInjector, Supervisor
+    from repro.train.trainer import TrainerConfig, train
+
+    cfg = get_config(args.arch, smoke=not args.full_config)
+    cfg = dataclasses.replace(cfg, matmul_mode=args.matmul_mode)
+    model = build(cfg)
+    shape = ShapeConfig("train", "train", args.seq_len, args.global_batch)
+    opt = OptimizerConfig(learning_rate=args.lr, warmup_steps=5,
+                          total_steps=args.steps)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, metrics_path=args.metrics)
+    injector = (FailureInjector(fail_at_steps=(args.fail_at,))
+                if args.fail_at else None)
+
+    def run():
+        _, hist = train(model, cfg, shape, tcfg, opt_cfg=opt,
+                        injector=injector,
+                        on_metrics=lambda s, m: (
+                            print(f"step {s:5d} loss {float(m['loss']):.4f} "
+                                  f"lr {float(m['lr']):.2e} "
+                                  f"gnorm {float(m['grad_norm']):.2f}")
+                            if s % 10 == 0 else None))
+        return hist[-1]["step"] if hist else 0
+
+    if injector:
+        out = Supervisor(max_restarts=3).run(run)
+        print(f"finished at step {out['final_step']} after "
+              f"{out['restarts']} restart(s)")
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

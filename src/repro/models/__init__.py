@@ -1,0 +1,4 @@
+"""Model zoo: composable layers + the four architecture families."""
+from repro.models.model import build
+
+__all__ = ["build"]

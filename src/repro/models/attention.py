@@ -1,0 +1,360 @@
+"""Attention: GQA/MQA (+SWA, prefix-LM, qk-norm) and MLA, with KV caches.
+
+Two execution paths share one mask/online-softmax core:
+
+  * direct   — materialise (B, H, Sq, Skv) scores (small sequences)
+  * chunked  — lax.scan over KV chunks with a running (max, denom, acc)
+               online softmax, so prefill at 32k/500k never materialises a
+               quadratic score tensor (flash-attention structure in jnp).
+
+KV caches carry explicit per-slot position arrays, which uniformly supports
+full-length caches and ring-buffer caches for sliding-window layers (local
+layers of gemma3 keep only `window` slots — see DESIGN.md §Long-context).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (ParamDef, apply_rope, dense, linear_def,
+                                 norm_def, rms_norm)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mask + softmax core
+# ---------------------------------------------------------------------------
+
+def _allowed(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+             window: Optional[int], prefix_len: Optional[jax.Array]) -> jax.Array:
+    """(..., Sq, Skv) boolean mask from absolute positions.
+
+    q_pos: (B, Sq); kv_pos: (B, Skv).  kv_pos < 0 marks empty cache slots.
+    """
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    ok = kp >= 0
+    if causal:
+        c = kp <= qp
+        if prefix_len is not None:
+            c = c | (kp < prefix_len[:, None, None])
+        ok = ok & c
+    if window is not None:
+        ok = ok & (qp - kp < window)
+    return ok
+
+
+def _sdpa_direct(q, k, v, mask, softcap=None):
+    """q: (B,KH,G,Sq,D) k: (B,KH,Skv,D) v: (B,KH,Skv,Dv) mask: (B,Sq,Skv)."""
+    scores = jnp.einsum("bhgqd,bhsd->bhgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgqs,bhsv->bhgqv", p, v.astype(jnp.float32))
+
+
+def _sdpa_chunked(q, k, v, q_pos, kv_pos, *, causal, window, prefix_len,
+                  chunk, softcap=None):
+    """Online-softmax over KV chunks; never forms (Sq, Skv) in full."""
+    b, kh, g, sq, d = q.shape
+    skv = k.shape[2]
+    dv = v.shape[-1]
+    n_chunks = skv // chunk
+    qf = q.astype(jnp.float32)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, kpc = inputs          # (B,KH,c,D), (B,KH,c,Dv), (B,c)
+        s = jnp.einsum("bhgqd,bhsd->bhgqs", qf, kc.astype(jnp.float32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = _allowed(q_pos, kpc, causal=causal, window=window,
+                        prefix_len=prefix_len)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqs,bhsv->bhgqv", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    ks = k.reshape(b, kh, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, kh, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+    kps = kv_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    init = (jnp.full((b, kh, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kh, g, sq), jnp.float32),
+            jnp.zeros((b, kh, g, sq, dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (ks, vs, kps))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def sdpa(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+         prefix_len=None, chunk=1024, softcap=None):
+    """Grouped SDPA. q: (B,Sq,H,D) k/v: (B,Skv,KH,D[v]) -> (B,Sq,H,Dv)."""
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, d).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qg = qg * scale
+    if skv > chunk and skv % chunk == 0:
+        out = _sdpa_chunked(qg, kt, vt, q_pos, kv_pos, causal=causal,
+                            window=window, prefix_len=prefix_len,
+                            chunk=chunk, softcap=softcap)
+    else:
+        mask = _allowed(q_pos, kv_pos, causal=causal, window=window,
+                        prefix_len=prefix_len)
+        out = _sdpa_direct(qg, kt, vt, mask, softcap=softcap)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, -1)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, length: int,
+                  ring: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract cache for ONE attention layer."""
+    n = min(length, cfg.window_size) if (ring and cfg.window_size) else length
+    if cfg.attention_type == "mla":
+        return {
+            "ckv": jax.ShapeDtypeStruct((batch, n, cfg.kv_lora_rank), jnp.bfloat16),
+            "krope": jax.ShapeDtypeStruct((batch, n, cfg.qk_rope_head_dim), jnp.bfloat16),
+            "pos": jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, n, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((batch, n, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "pos": jax.ShapeDtypeStruct((batch, n, ), jnp.int32),
+    }
+
+
+def init_cache(spec) -> Dict[str, jax.Array]:
+    return {k: (jnp.full(v.shape, -1, v.dtype) if k == "pos"
+                else jnp.zeros(v.shape, v.dtype)) for k, v in spec.items()}
+
+
+def _cache_write(cache: Dict[str, jax.Array], updates: Dict[str, jax.Array],
+                 pos: jax.Array) -> Dict[str, jax.Array]:
+    """Write one token (Sq=1) at absolute position ``pos`` (scalar int32).
+
+    Ring semantics: slot = pos % cache_len (== pos for full caches).
+    """
+    n = cache["pos"].shape[1]
+    slot = pos % n
+    new = {}
+    for key, val in updates.items():
+        new[key] = jax.lax.dynamic_update_slice_in_dim(
+            cache[key], val.astype(cache[key].dtype), slot, axis=1)
+    b = cache["pos"].shape[0]
+    new["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32), slot, axis=1)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    h, kh, d, dm = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    defs = {
+        "wq": linear_def(dm, h * d, "d_model", "heads", dtype),
+        "wk": linear_def(dm, kh * d, "d_model", "kv_heads", dtype),
+        "wv": linear_def(dm, kh * d, "d_model", "kv_heads", dtype),
+        "wo": linear_def(h * d, dm, "heads", "d_model", dtype),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h * d,), ("heads",), dtype, "zeros")
+        defs["bk"] = ParamDef((kh * d,), ("kv_heads",), dtype, "zeros")
+        defs["bv"] = ParamDef((kh * d,), ("kv_heads",), dtype, "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = norm_def(d)
+        defs["k_norm"] = norm_def(d)
+    return defs
+
+
+def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
+              window: Optional[int], cache: Optional[Dict] = None,
+              prefix_len: Optional[jax.Array] = None,
+              cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              causal: bool = True, rope: bool = True):
+    """Returns (out, new_cache).  Modes:
+       * train/prefill: cache is None or written densely
+       * decode: x is (B, 1, D); cache holds the past
+       * cross attention: cross_kv supplies (k, v) precomputed; no cache.
+    """
+    b, sq, _ = x.shape
+    h, kh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    mode = cfg.matmul_mode
+    q = dense(x, p["wq"], mode, p.get("bq")).reshape(b, sq, h, d)
+    if cross_kv is None:
+        k = dense(x, p["wk"], mode, p.get("bk")).reshape(b, sq, kh, d)
+        v = dense(x, p["wv"], mode, p.get("bv")).reshape(b, sq, kh, d)
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope and cross_kv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    q_pos = positions if positions.ndim == 2 else jnp.broadcast_to(
+        positions[None], (b, sq))
+    new_cache = cache
+    if cache is not None and cross_kv is None:
+        if sq == 1:  # decode: write one slot, attend over the cache
+            new_cache = _cache_write(cache, {"k": k, "v": v}, q_pos[0, 0])
+            k_all, v_all, kv_pos = new_cache["k"], new_cache["v"], new_cache["pos"]
+        else:        # prefill: dense write (ring caches keep the last n
+            # tokens at slots pos % n, matching decode's addressing)
+            n = cache["k"].shape[1]
+            if n < sq:
+                slots = jnp.arange(sq - n, sq) % n
+                new_cache = {
+                    "k": cache["k"].at[:, slots].set(
+                        k[:, sq - n:].astype(cache["k"].dtype)),
+                    "v": cache["v"].at[:, slots].set(
+                        v[:, sq - n:].astype(cache["v"].dtype)),
+                    "pos": cache["pos"].at[:, slots].set(q_pos[:, sq - n:]),
+                }
+            else:
+                new_cache = {
+                    "k": cache["k"].at[:, :sq].set(k.astype(cache["k"].dtype)),
+                    "v": cache["v"].at[:, :sq].set(v.astype(cache["v"].dtype)),
+                    "pos": cache["pos"].at[:, :sq].set(q_pos),
+                }
+            k_all, v_all, kv_pos = k, v, q_pos
+    else:
+        k_all, v_all = k, v
+        kv_pos = (q_pos if cross_kv is None else
+                  jnp.broadcast_to(jnp.arange(k.shape[1])[None], (b, k.shape[1])))
+
+    out = sdpa(q, k_all, v_all, q_pos, kv_pos, causal=causal and cross_kv is None,
+               window=window, prefix_len=prefix_len, chunk=cfg.attn_chunk,
+               softcap=cfg.logit_softcap)
+    out = dense(out.reshape(b, sq, h * d).astype(x.dtype), p["wo"], mode)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention) — minicpm3 / deepseek-v2
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    dm, h = cfg.d_model, cfg.num_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    defs = {
+        "wdkv": linear_def(dm, cfg.kv_lora_rank + cfg.qk_rope_head_dim,
+                           "d_model", "lora", dtype),
+        "kv_norm": norm_def(cfg.kv_lora_rank),
+        "wuk": ParamDef((cfg.kv_lora_rank, h, cfg.qk_nope_head_dim),
+                        ("lora", "heads", None), dtype),
+        "wuv": ParamDef((cfg.kv_lora_rank, h, cfg.v_head_dim),
+                        ("lora", "heads", None), dtype),
+        "wo": linear_def(h * cfg.v_head_dim, dm, "heads", "d_model", dtype),
+    }
+    if cfg.q_lora_rank:
+        defs["wdq"] = linear_def(dm, cfg.q_lora_rank, "d_model", "lora", dtype)
+        defs["q_norm"] = norm_def(cfg.q_lora_rank)
+        defs["wuq"] = linear_def(cfg.q_lora_rank, h * qk, "lora", "heads", dtype)
+    else:
+        defs["wq"] = linear_def(dm, h * qk, "d_model", "heads", dtype)
+    return defs
+
+
+def _mla_q(p, cfg, x):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    mode = cfg.matmul_mode
+    if cfg.q_lora_rank:
+        ql = rms_norm(dense(x, p["wdq"], mode), p["q_norm"], cfg.norm_eps)
+        q = dense(ql, p["wuq"], mode)
+    else:
+        q = dense(x, p["wq"], mode)
+    q = q.reshape(b, s, h, qk)
+    return (q[..., : cfg.qk_nope_head_dim],
+            q[..., cfg.qk_nope_head_dim:])        # (nope, rope)
+
+
+def mla_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
+              cache: Optional[Dict] = None, window=None):
+    """MLA attention.  Prefill/train expands K/V from the latent; decode
+    uses the absorbed formulation (scores in the kv_lora latent space), so
+    the per-step cost is O(S * kv_lora) instead of O(S * H * head_dim)."""
+    b, sq, _ = x.shape
+    h = cfg.num_heads
+    mode = cfg.matmul_mode
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    dkv = dense(x, p["wdkv"], mode)
+    ckv = rms_norm(dkv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    krope = dkv[..., cfg.kv_lora_rank:]           # (B, S, rope_dim)
+    q_pos = positions if positions.ndim == 2 else jnp.broadcast_to(
+        positions[None], (b, sq))
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim))
+
+    if cache is not None and sq == 1:
+        # ---- absorbed decode ----
+        new_cache = _cache_write(cache, {"ckv": ckv, "krope": krope}, q_pos[0, 0])
+        ckv_all = new_cache["ckv"].astype(jnp.float32)        # (B, S, R)
+        kr_all = new_cache["krope"].astype(jnp.float32)       # (B, S, P)
+        kv_pos = new_cache["pos"]
+        # absorb W_uk into q: qa (B,1,H,R)
+        qa = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                        p["wuk"].astype(jnp.float32))
+        s_nope = jnp.einsum("bqhr,bsr->bhqs", qa, ckv_all)
+        s_rope = jnp.einsum("bqhp,bsp->bhqs", q_rope.astype(jnp.float32), kr_all)
+        scores = (s_nope + s_rope) * scale
+        mask = _allowed(q_pos, kv_pos, causal=True, window=window, prefix_len=None)
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        pr = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, ckv_all)     # (B,1,H,R)
+        out = jnp.einsum("bqhr,rhv->bqhv", o_lat, p["wuv"].astype(jnp.float32))
+    else:
+        # ---- expanded train/prefill ----
+        if cache is not None:
+            # prefill must expand from the SAME bf16-rounded latents it
+            # stores, so later absorbed decode reproduces its logits
+            ckv_e = ckv.astype(jnp.bfloat16).astype(jnp.float32)
+            kr_e = krope.astype(jnp.bfloat16).astype(jnp.float32)
+        else:
+            ckv_e = ckv.astype(jnp.float32)
+            kr_e = krope.astype(jnp.float32)
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv_e,
+                            p["wuk"].astype(jnp.float32))
+        v = jnp.einsum("bsr,rhv->bshv", ckv_e,
+                       p["wuv"].astype(jnp.float32))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_e[:, :, None, :],
+                                      k_nope.shape[:3] + (cfg.qk_rope_head_dim,))],
+            axis=-1)
+        q = jnp.concatenate([q_nope.astype(jnp.float32),
+                             q_rope.astype(jnp.float32)], axis=-1)
+        out = sdpa(q, k, v, q_pos, q_pos, causal=True, window=window,
+                   chunk=cfg.attn_chunk)
+        new_cache = cache
+        if cache is not None:  # prefill: store latents
+            new_cache = {
+                "ckv": cache["ckv"].at[:, :sq].set(ckv.astype(cache["ckv"].dtype)),
+                "krope": cache["krope"].at[:, :sq].set(krope.astype(cache["krope"].dtype)),
+                "pos": cache["pos"].at[:, :sq].set(q_pos),
+            }
+    out = out.reshape(b, sq, h * cfg.v_head_dim).astype(x.dtype)
+    return dense(out, p["wo"], mode), new_cache

@@ -1,0 +1,710 @@
+"""Model composition: one ``Model`` API over four architecture families.
+
+  decoder — gemma3, h2o-danube, minicpm3, qwen2, granite-moe, deepseek-v2,
+            paligemma (prefix-LM over stub patch embeddings)
+  encdec  — whisper (stub frame embeddings -> encoder; causal decoder with
+            cross attention)
+  hybrid  — zamba2 (mamba2 backbone + shared attention block every N layers
+            with per-invocation LoRA adapters)
+  xlstm   — xLSTM (mLSTM blocks with a sLSTM block every N)
+
+API (all functional, pytree params):
+  schema()                      -> ParamDef tree
+  loss(params, batch)           -> (scalar loss, metrics dict)      [train]
+  prefill(params, batch)        -> (last-position logits, cache)
+  decode_step(params, tok, cache, pos) -> (logits, cache)
+  cache_spec(batch, length)     -> abstract cache pytree (+ logical axes)
+
+Layer stacks are scanned (jax.lax.scan over stacked params) so compile time
+and HLO size are O(1) in depth; heterogeneous stacks scan over groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (ParamDef, chunked_softmax_xent, dense,
+                                 embed_def, embed_lookup, layer_norm, ln_defs,
+                                 linear_def, mlp_apply, mlp_defs, norm_def,
+                                 rms_norm)
+from repro.models.params import abstract_tree, axes_tree, stack
+
+BIG_WINDOW = 1 << 30  # "no window" sentinel usable as a traced int
+
+
+# =============================================================================
+# decoder family
+# =============================================================================
+
+def _decoder_layer_defs(cfg: ModelConfig, moe: bool):
+    d = {"ln1": norm_def(cfg.d_model), "ln2": norm_def(cfg.d_model)}
+    if cfg.attention_type == "mla":
+        d["attn"] = attn.mla_defs(cfg)
+    else:
+        d["attn"] = attn.gqa_defs(cfg)
+    if moe:
+        d["moe"] = moe_mod.moe_defs(cfg)
+    else:
+        d["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff, cfg.mlp_gated)
+    if cfg.local_global_pattern:  # gemma3 also post-norms
+        d["post_ln1"] = norm_def(cfg.d_model)
+        d["post_ln2"] = norm_def(cfg.d_model)
+    return d
+
+
+def _layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention windows as an int array (BIG_WINDOW = full)."""
+    L = cfg.num_layers
+    if cfg.local_global_pattern:
+        per = cfg.local_global_pattern + 1
+        w = np.full((L,), cfg.window_size or BIG_WINDOW, np.int64)
+        w[per - 1 :: per] = BIG_WINDOW          # every per-th layer is global
+        return w
+    if cfg.window_size:
+        return np.full((L,), cfg.window_size, np.int64)
+    return np.full((L,), BIG_WINDOW, np.int64)
+
+
+def _decoder_layer_apply(p, cfg: ModelConfig, x, positions, *, window,
+                         cache=None, prefix_len=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attention_type == "mla":
+        a, new_cache = attn.mla_apply(p["attn"], cfg, h, positions,
+                                      cache=cache, window=window)
+    else:
+        a, new_cache = attn.gqa_apply(p["attn"], cfg, h, positions,
+                                      window=window, cache=cache,
+                                      prefix_len=prefix_len)
+    if "post_ln1" in p:
+        a = rms_norm(a, p["post_ln1"], cfg.norm_eps)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if "moe" in p:
+        r = moe_mod.moe_apply(p["moe"], cfg, h)
+        m, aux = r["out"], r["aux_loss"]
+    else:
+        m = mlp_apply(p["mlp"], h, cfg.act, cfg.mlp_gated, cfg.matmul_mode)
+    if "post_ln2" in p:
+        m = rms_norm(m, p["post_ln2"], cfg.norm_eps)
+    return x + m, new_cache, aux
+
+
+@dataclasses.dataclass
+class DecoderModel:
+    cfg: ModelConfig
+
+    # ---------------- schema ----------------
+    def schema(self):
+        cfg = self.cfg
+        n_dense = cfg.first_dense_layers
+        n_rest = cfg.num_layers - n_dense
+        layer_moe = cfg.num_experts > 0
+        sch: Dict[str, Any] = {
+            "embed": embed_def(cfg.vocab_size, cfg.d_model),
+            "final_norm": norm_def(cfg.d_model),
+            "layers": stack(_decoder_layer_defs(cfg, layer_moe), n_rest),
+        }
+        if n_dense:
+            sch["dense_layers"] = stack(_decoder_layer_defs(cfg, False), n_dense)
+        if not cfg.tie_embeddings:
+            sch["head"] = linear_def(cfg.d_model, cfg.vocab_size,
+                                     "d_model", "vocab")
+        return sch
+
+    # ---------------- shared forward over the stack ----------------
+    def _stack(self, params, x, positions, caches, prefix_len, mode: str):
+        cfg = self.cfg
+        windows = _layer_windows(cfg)
+        aux_total = jnp.float32(0.0)
+        n_dense = cfg.first_dense_layers
+
+        def run_stack(stack_params, stack_cache, x, windows_arr, aux_total):
+            def layer_fn(x, lp, lcache, w):
+                return _decoder_layer_apply(lp, cfg, x, positions, window=w,
+                                            cache=lcache,
+                                            prefix_len=prefix_len)
+
+            fn = (jax.checkpoint(layer_fn)
+                  if (cfg.remat and mode == "train") else layer_fn)
+
+            def body(carry, inp):
+                x, aux = carry
+                lp, lcache, w = inp
+                lcache = _as_cache(lcache)
+                x = shard(x, "batch", "seq", None)
+                x2, ncache, aux1 = fn(x, lp, lcache, w)
+                return (x2, aux + aux1), (ncache if ncache is not None
+                                          else jnp.zeros((0,)))
+
+            (x, aux_total), new_caches = jax.lax.scan(
+                body, (x, aux_total), (stack_params, stack_cache, windows_arr))
+            return x, new_caches, aux_total
+
+        new_cache = {}
+        if n_dense:
+            wd = jnp.asarray(windows[:n_dense])
+            cd = caches["dense_layers"] if caches is not None else _none_like(
+                params["dense_layers"])
+            x, nc, aux_total = run_stack(params["dense_layers"], cd, x, wd,
+                                         aux_total)
+            new_cache["dense_layers"] = nc
+        wr = jnp.asarray(windows[n_dense:])
+        cr = caches["layers"] if caches is not None else _none_like(
+            params["layers"])
+        x, nc, aux_total = run_stack(params["layers"], cr, x, wr, aux_total)
+        new_cache["layers"] = nc
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, (new_cache if caches is not None else None), aux_total
+
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed_lookup(params["embed"], tokens,
+                         scale=cfg.local_global_pattern > 0 or
+                         cfg.num_prefix_tokens > 0)
+        if cfg.num_prefix_tokens and "patches" in batch:
+            # paligemma: prepend stub patch embeddings (frontend is a STUB;
+            # input_specs supplies precomputed patch embeddings)
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        return x
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                            w.astype(jnp.float32))
+        if cfg.logit_softcap:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        return logits
+
+    # ---------------- entry points ----------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        prefix = (jnp.full((b,), cfg.num_prefix_tokens, jnp.int32)
+                  if cfg.num_prefix_tokens else None)
+        h, _, aux = self._stack(params, x, positions, None, prefix, "train")
+        if cfg.num_prefix_tokens:
+            h = h[:, cfg.num_prefix_tokens:]
+        labels = batch["labels"]
+        mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+        total, denom = chunked_softmax_xent(
+            h, params["embed"] if cfg.tie_embeddings else params["head"].T,
+            labels, mask, softcap=cfg.logit_softcap)
+        loss = total / jnp.maximum(denom, 1.0)
+        if cfg.num_experts:
+            loss = loss + 0.01 * aux / cfg.num_layers
+        return loss, {"loss": loss, "aux_loss": aux}
+
+    def cache_spec(self, batch: int, length: int):
+        cfg = self.cfg
+        ring = cfg.ring_cache
+        if ring:
+            # ring caches require every layer windowed (uniform SWA)
+            assert cfg.window_size and not cfg.local_global_pattern, cfg.name
+        one = attn.kv_cache_spec(cfg, batch, length, ring=ring)
+        n_dense = cfg.first_dense_layers
+        n_rest = cfg.num_layers - n_dense
+        out = {"layers": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_rest,) + s.shape, s.dtype), one)}
+        if n_dense:
+            out["dense_layers"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_dense,) + s.shape, s.dtype), one)
+        return out
+
+    def cache_axes(self, batch: int, length: int):
+        cfg = self.cfg
+        if cfg.attention_type == "mla":
+            one = {"ckv": ("stack", "batch", "kv_seq", None),
+                   "krope": ("stack", "batch", "kv_seq", None),
+                   "pos": ("stack", "batch", "kv_seq")}
+        else:
+            one = {"k": ("stack", "batch", "kv_seq", "kv_heads", None),
+                   "v": ("stack", "batch", "kv_seq", "kv_heads", None),
+                   "pos": ("stack", "batch", "kv_seq")}
+        out = {"layers": one}
+        if cfg.first_dense_layers:
+            out["dense_layers"] = one
+        return out
+
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        b, s, _ = x.shape
+        # the cache must also hold the prefix (e.g. paligemma image tokens)
+        cache = jax.tree.map(lambda sp: (jnp.full(sp.shape, -1, sp.dtype)
+                                         if sp.dtype == jnp.int32 else
+                                         jnp.zeros(sp.shape, sp.dtype)),
+                             self.cache_spec(b, cache_len + cfg.num_prefix_tokens))
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        prefix = (jnp.full((b,), cfg.num_prefix_tokens, jnp.int32)
+                  if cfg.num_prefix_tokens else None)
+        h, cache, _ = self._stack(params, x, positions, cache, prefix, "prefill")
+        logits = self._logits(params, h[:, -1:])
+        return logits[:, 0], cache
+
+    def decode_step(self, params, tokens, cache, pos):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens,
+                         scale=cfg.local_global_pattern > 0 or
+                         cfg.num_prefix_tokens > 0)
+        b = x.shape[0]
+        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, 1))
+        h, cache, _ = self._stack(params, x, positions, cache, None, "decode")
+        logits = self._logits(params, h)
+        return logits[:, 0], cache
+
+
+def _none_like(tree):
+    """A scan-compatible 'no cache' pytree (None leaves break scan xs)."""
+    n = jax.tree.leaves(tree)[0].shape[0]
+    return jnp.zeros((n, 0))
+
+
+def _as_cache(x):
+    """Scan slices of the _none_like dummy become arrays; map them to None."""
+    return x if isinstance(x, dict) else None
+
+
+# =============================================================================
+# encoder-decoder family (whisper)
+# =============================================================================
+
+def _enc_layer_defs(cfg: ModelConfig):
+    return {"ln1": ln_defs(cfg.d_model), "attn": attn.gqa_defs(cfg),
+            "ln2": ln_defs(cfg.d_model),
+            "mlp": mlp_defs(cfg.d_model, cfg.d_ff, gated=False)}
+
+
+def _dec_layer_defs(cfg: ModelConfig):
+    return {"ln1": ln_defs(cfg.d_model), "self_attn": attn.gqa_defs(cfg),
+            "ln_x": ln_defs(cfg.d_model), "cross_attn": attn.gqa_defs(cfg),
+            "ln2": ln_defs(cfg.d_model),
+            "mlp": mlp_defs(cfg.d_model, cfg.d_ff, gated=False)}
+
+
+@dataclasses.dataclass
+class EncDecModel:
+    cfg: ModelConfig
+
+    def schema(self):
+        cfg = self.cfg
+        return {
+            "embed": embed_def(cfg.vocab_size, cfg.d_model),
+            # decoder learned positions sized for the largest decode shape
+            "pos_embed": ParamDef((32_768, cfg.d_model),
+                                  (None, "d_model"), jnp.bfloat16, "embed"),
+            "enc_pos_embed": ParamDef((cfg.encoder_frames, cfg.d_model),
+                                      ("frames", "d_model"), jnp.bfloat16,
+                                      "embed"),
+            "enc_layers": stack(_enc_layer_defs(cfg), cfg.encoder_layers),
+            "enc_norm": ln_defs(cfg.d_model),
+            "dec_layers": stack(_dec_layer_defs(cfg), cfg.num_layers),
+            "dec_norm": ln_defs(cfg.d_model),
+        }
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(jnp.bfloat16) + params["enc_pos_embed"][None]
+
+        def body(x, lp):
+            h = layer_norm(x, lp["ln1"]["gamma"], lp["ln1"]["beta"], cfg.norm_eps)
+            a, _ = attn.gqa_apply(lp["attn"], cfg, h,
+                                  jnp.arange(x.shape[1]), window=None,
+                                  causal=False, rope=False)
+            x = x + a
+            h = layer_norm(x, lp["ln2"]["gamma"], lp["ln2"]["beta"], cfg.norm_eps)
+            x = x + mlp_apply(lp["mlp"], h, "gelu", False, cfg.matmul_mode)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return layer_norm(x, params["enc_norm"]["gamma"],
+                          params["enc_norm"]["beta"], cfg.norm_eps)
+
+    def _decode_stack(self, params, x, positions, enc_out, caches, mode,
+                      cross_cache=None):
+        """enc_out drives cross attention in train/prefill; decode instead
+        reads per-layer cross K/V cached at prefill (computing them once
+        instead of re-projecting the encoder output every token —
+        EXPERIMENTS.md §Roofline whisper-decode note)."""
+        cfg = self.cfg
+        kh, hd = cfg.num_kv_heads, cfg.head_dim
+
+        def body(carry, inp):
+            x, = carry
+            lp, lcache, lcross = inp
+            lcache = _as_cache(lcache)
+            h = layer_norm(x, lp["ln1"]["gamma"], lp["ln1"]["beta"], cfg.norm_eps)
+            a, ncache = attn.gqa_apply(lp["self_attn"], cfg, h, positions,
+                                       window=None, cache=lcache, rope=False)
+            x = x + a
+            h = layer_norm(x, lp["ln_x"]["gamma"], lp["ln_x"]["beta"], cfg.norm_eps)
+            if lcross is not None:
+                ck, cv = lcross["k"], lcross["v"]
+            else:
+                b, f = enc_out.shape[0], enc_out.shape[1]
+                ck = dense(enc_out, lp["cross_attn"]["wk"],
+                           cfg.matmul_mode).reshape(b, f, kh, hd)
+                cv = dense(enc_out, lp["cross_attn"]["wv"],
+                           cfg.matmul_mode).reshape(b, f, kh, hd)
+            a, _ = attn.gqa_apply(lp["cross_attn"], cfg, h, positions,
+                                  window=None, cross_kv=(ck, cv), rope=False)
+            x = x + a
+            h = layer_norm(x, lp["ln2"]["gamma"], lp["ln2"]["beta"], cfg.norm_eps)
+            x = x + mlp_apply(lp["mlp"], h, "gelu", False, cfg.matmul_mode)
+            new_cross = {"k": ck.astype(jnp.bfloat16),
+                         "v": cv.astype(jnp.bfloat16)}
+            return (x,), (ncache, new_cross)
+
+        body_fn = (jax.checkpoint(body) if (cfg.remat and mode == "train")
+                   else body)
+        cc = caches if caches is not None else _none_like(params["dec_layers"])
+        xc = (cross_cache if cross_cache is not None
+              else _none_like(params["dec_layers"]))
+
+        def body_wrap(carry, inp):
+            lp, lcache, lcross = inp
+            return body_fn(carry, (lp, lcache, _as_cache(lcross)))
+
+        (x,), (new_caches, new_cross) = jax.lax.scan(
+            body_wrap, (x,), (params["dec_layers"], cc, xc))
+        x = layer_norm(x, params["dec_norm"]["gamma"],
+                       params["dec_norm"]["beta"], cfg.norm_eps)
+        return x, (new_caches if caches is not None else None), new_cross
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_lookup(params["embed"], tokens) + params["pos_embed"][None, :s]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        h, _, _ = self._decode_stack(params, x, positions, enc_out, None,
+                                     "train")
+        mask = batch.get("loss_mask", jnp.ones_like(batch["labels"], jnp.float32))
+        total, denom = chunked_softmax_xent(h, params["embed"],
+                                            batch["labels"], mask)
+        loss = total / jnp.maximum(denom, 1.0)
+        return loss, {"loss": loss}
+
+    def cache_spec(self, batch: int, length: int):
+        cfg = self.cfg
+        one = attn.kv_cache_spec(cfg, batch, length)
+        stk = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape,
+                                           s.dtype), t)
+        cross_one = {
+            "k": jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_frames, cfg.num_kv_heads, cfg.head_dim),
+                jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_frames, cfg.num_kv_heads, cfg.head_dim),
+                jnp.bfloat16),
+        }
+        return {"self": stk(one), "cross": stk(cross_one)}
+
+    def cache_axes(self, batch: int, length: int):
+        one = {"k": ("stack", "batch", "kv_seq", "kv_heads", None),
+               "v": ("stack", "batch", "kv_seq", "kv_heads", None),
+               "pos": ("stack", "batch", "kv_seq")}
+        cross = {"k": ("stack", "batch", "frames", "kv_heads", None),
+                 "v": ("stack", "batch", "frames", "kv_heads", None)}
+        return {"self": one, "cross": cross}
+
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        spec = self.cache_spec(b, cache_len)
+        cache = jax.tree.map(lambda sp: (jnp.full(sp.shape, -1, sp.dtype)
+                                         if sp.dtype == jnp.int32 else
+                                         jnp.zeros(sp.shape, sp.dtype)), spec)
+        x = embed_lookup(params["embed"], tokens) + params["pos_embed"][None, :s]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        h, selfc, cross = self._decode_stack(params, x, positions, enc_out,
+                                             cache["self"], "prefill")
+        cache = {"self": selfc, "cross": cross}
+        logits = jnp.einsum("bd,vd->bv", h[:, -1].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, pos):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = embed_lookup(params["embed"], tokens)
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"],
+                                             pos, 1, axis=0)[None]
+        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, 1))
+        h, selfc, cross = self._decode_stack(params, x, positions, None,
+                                             cache["self"], "decode",
+                                             cross_cache=cache["cross"])
+        logits = jnp.einsum("bd,vd->bv", h[:, 0].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        return logits, {"self": selfc, "cross": cross}
+
+
+# =============================================================================
+# hybrid family (zamba2): mamba2 backbone + shared attention block
+# =============================================================================
+
+@dataclasses.dataclass
+class HybridModel:
+    cfg: ModelConfig
+
+    def _group_dims(self):
+        cfg = self.cfg
+        n_groups = cfg.num_layers // cfg.attn_every
+        return n_groups, cfg.attn_every
+
+    def schema(self):
+        cfg = self.cfg
+        n_groups, per = self._group_dims()
+        mamba = stack(stack({"block": ssm_mod.mamba2_defs(cfg),
+                             "ln": norm_def(cfg.d_model)}, per), n_groups)
+        r = cfg.lora_rank
+        lora = stack({
+            "a_q": ParamDef((cfg.d_model, r), ("d_model", None)),
+            "b_q": ParamDef((r, cfg.num_heads * cfg.head_dim), (None, "heads"),
+                            jnp.bfloat16, "zeros"),
+        }, n_groups)
+        return {
+            "embed": embed_def(cfg.vocab_size, cfg.d_model),
+            "final_norm": norm_def(cfg.d_model),
+            "mamba": mamba,
+            "shared": {"ln1": norm_def(cfg.d_model),
+                       "attn": attn.gqa_defs(cfg),
+                       "ln2": norm_def(cfg.d_model),
+                       "mlp": mlp_defs(cfg.d_model, cfg.d_ff, True)},
+            "lora": lora,
+        }
+
+    def _forward(self, params, x, positions, caches, mode):
+        cfg = self.cfg
+        n_groups, per = self._group_dims()
+        shared = params["shared"]
+
+        def group_body(carry, inp):
+            x, = carry
+            gp, lora_p, gcache = inp
+            gcache = _as_cache(gcache)
+
+            def mamba_body(xc, minp):
+                mp, mcache = minp
+                mcache = _as_cache(mcache)
+                h = rms_norm(xc, mp["ln"], cfg.norm_eps)
+                y, mstate = ssm_mod.mamba2_apply(mp["block"], cfg, h,
+                                                 state=mcache)
+                return xc + y, (mstate if mstate is not None
+                                else jnp.zeros((0,)))
+
+            mamba_fn = (jax.checkpoint(mamba_body)
+                        if (cfg.remat and mode == "train") else mamba_body)
+            mc = (gcache["mamba"] if gcache is not None else
+                  _none_like(gp))
+            x, new_mc = jax.lax.scan(mamba_fn, x, (gp, mc))
+            # shared attention block with per-group LoRA (parallel adapter)
+            h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+            ac = gcache["attn"] if gcache is not None else None
+            a, new_ac = attn.gqa_apply(shared["attn"], cfg, h, positions,
+                                       window=None, cache=ac)
+            a = a + dense(dense(h, lora_p["a_q"], "bf16"), lora_p["b_q"],
+                          "bf16")
+            x = x + a
+            h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(shared["mlp"], h, cfg.act, True, cfg.matmul_mode)
+            new_cache = ({"mamba": new_mc, "attn": new_ac}
+                         if gcache is not None else jnp.zeros((0,)))
+            return (x,), new_cache
+
+        gc = caches if caches is not None else _none_like(params["lora"])
+        (x,), new_caches = jax.lax.scan(group_body, (x,),
+                                        (params["mamba"], params["lora"], gc))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, (new_caches if caches is not None else None)
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_lookup(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        h, _ = self._forward(params, x, positions, None, "train")
+        mask = batch.get("loss_mask", jnp.ones_like(batch["labels"], jnp.float32))
+        total, denom = chunked_softmax_xent(h, params["embed"],
+                                            batch["labels"], mask)
+        loss = total / jnp.maximum(denom, 1.0)
+        return loss, {"loss": loss}
+
+    def cache_spec(self, batch: int, length: int):
+        cfg = self.cfg
+        n_groups, per = self._group_dims()
+        mamba_one = ssm_mod.mamba2_state_spec(cfg, batch)
+        attn_one = attn.kv_cache_spec(cfg, batch, length)
+
+        def stk(tree, n):
+            return jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                (n,) + s.shape, s.dtype), tree)
+
+        return stk({"mamba": stk(mamba_one, per), "attn": attn_one}, n_groups)
+
+    def cache_axes(self, batch: int, length: int):
+        mamba = {"conv": ("stack", "stack2", "batch", None, "ffn"),
+                 "ssm": ("stack", "stack2", "batch", "heads", None, "state")}
+        a = {"k": ("stack", "batch", "kv_seq", "kv_heads", None),
+             "v": ("stack", "batch", "kv_seq", "kv_heads", None),
+             "pos": ("stack", "batch", "kv_seq")}
+        return {"mamba": mamba, "attn": a}
+
+    def prefill(self, params, batch, cache_len: int):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        spec = self.cache_spec(b, cache_len)
+        cache = jax.tree.map(lambda sp: (jnp.full(sp.shape, -1, sp.dtype)
+                                         if sp.dtype == jnp.int32 else
+                                         jnp.zeros(sp.shape, sp.dtype)), spec)
+        x = embed_lookup(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        h, cache = self._forward(params, x, positions, cache, "prefill")
+        logits = jnp.einsum("bd,vd->bv", h[:, -1].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, pos):
+        b = tokens.shape[0]
+        x = embed_lookup(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, 1))
+        h, cache = self._forward(params, x, positions, cache, "decode")
+        logits = jnp.einsum("bd,vd->bv", h[:, 0].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        return logits, cache
+
+
+# =============================================================================
+# xLSTM family
+# =============================================================================
+
+@dataclasses.dataclass
+class XLSTMModel:
+    cfg: ModelConfig
+
+    def _group_dims(self):
+        cfg = self.cfg
+        per = cfg.slstm_every
+        return cfg.num_layers // per, per
+
+    def schema(self):
+        cfg = self.cfg
+        n_groups, per = self._group_dims()
+        return {
+            "embed": embed_def(cfg.vocab_size, cfg.d_model),
+            "final_norm": norm_def(cfg.d_model),
+            "mlstm": stack(stack({"ln": norm_def(cfg.d_model),
+                                  "block": ssm_mod.mlstm_defs(cfg)}, per - 1),
+                           n_groups),
+            "slstm": stack({"ln": norm_def(cfg.d_model),
+                            "block": ssm_mod.slstm_defs(cfg)}, n_groups),
+        }
+
+    def _forward(self, params, x, caches, mode):
+        cfg = self.cfg
+
+        def group_body(carry, inp):
+            x, = carry
+            mp, sp, gcache = inp
+            gcache = _as_cache(gcache)
+
+            def m_body(xc, minp):
+                lp, mstate = minp
+                mstate = _as_cache(mstate)
+                h = rms_norm(xc, lp["ln"], cfg.norm_eps)
+                y, new_state = ssm_mod.mlstm_apply(lp["block"], cfg, h,
+                                                   state=mstate)
+                return xc + y, (new_state if new_state is not None
+                                else jnp.zeros((0,)))
+
+            m_fn = (jax.checkpoint(m_body)
+                    if (cfg.remat and mode == "train") else m_body)
+            mc = gcache["mlstm"] if gcache is not None else _none_like(mp)
+            x, new_mc = jax.lax.scan(m_fn, x, (mp, mc))
+            h = rms_norm(x, sp["ln"], cfg.norm_eps)
+            sc = gcache["slstm"] if gcache is not None else None
+            y, new_sc = ssm_mod.slstm_apply(sp["block"], cfg, h, state=sc)
+            x = x + y
+            new_cache = ({"mlstm": new_mc, "slstm": new_sc}
+                         if gcache is not None else jnp.zeros((0,)))
+            return (x,), new_cache
+
+        gc = caches if caches is not None else _none_like(params["slstm"])
+        (x,), new_caches = jax.lax.scan(group_body, (x,),
+                                        (params["mlstm"], params["slstm"], gc))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, (new_caches if caches is not None else None)
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        x = embed_lookup(params["embed"], tokens)
+        h, _ = self._forward(params, x, None, "train")
+        mask = batch.get("loss_mask", jnp.ones_like(batch["labels"], jnp.float32))
+        total, denom = chunked_softmax_xent(h, params["embed"],
+                                            batch["labels"], mask)
+        loss = total / jnp.maximum(denom, 1.0)
+        return loss, {"loss": loss}
+
+    def cache_spec(self, batch: int, length: int):
+        cfg = self.cfg
+        n_groups, per = self._group_dims()
+
+        def stk(tree, n):
+            return jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                (n,) + s.shape, s.dtype), tree)
+
+        return stk({"mlstm": stk(ssm_mod.mlstm_state_spec(cfg, batch), per - 1),
+                    "slstm": ssm_mod.slstm_state_spec(cfg, batch)}, n_groups)
+
+    def cache_axes(self, batch: int, length: int):
+        m = {"C": ("stack", "stack2", "batch", "heads", None, None),
+             "n": ("stack", "stack2", "batch", "heads", None),
+             "m": ("stack", "stack2", "batch", "heads")}
+        s = {"c": ("stack", "batch", "heads", None),
+             "n": ("stack", "batch", "heads", None),
+             "h": ("stack", "batch", "heads", None),
+             "m": ("stack", "batch", "heads")}
+        return {"mlstm": m, "slstm": s}
+
+    def prefill(self, params, batch, cache_len: int):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        spec = self.cache_spec(b, cache_len)
+        cache = jax.tree.map(lambda sp: jnp.zeros(sp.shape, sp.dtype), spec)
+        x = embed_lookup(params["embed"], tokens)
+        h, cache = self._forward(params, x, cache, "prefill")
+        logits = jnp.einsum("bd,vd->bv", h[:, -1].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, pos):
+        x = embed_lookup(params["embed"], tokens)
+        h, cache = self._forward(params, x, cache, "decode")
+        logits = jnp.einsum("bd,vd->bv", h[:, 0].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        return logits, cache
+
+
+# =============================================================================
+
+def build(cfg: ModelConfig):
+    return {"decoder": DecoderModel, "encdec": EncDecModel,
+            "hybrid": HybridModel, "xlstm": XLSTMModel}[cfg.family](cfg)

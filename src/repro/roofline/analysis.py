@@ -1,0 +1,163 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch, shape, mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+summed over devices by XLA's SPMD cost model on the partitioned module).
+collective_bytes is parsed from the optimised HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op we take the result-shape bytes, scale by the standard ring-traffic factor
+for its participant-group size, and attribute it per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.roofline import hw
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?"
+    r"(\(?[a-z0-9\[\],\s{}/#*]+\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in hw.DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * hw.DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+#: bytes moved over the wire per participant, as a multiple of the result
+#: bytes resident per device, for a ring implementation with n participants.
+def _traffic_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def collective_bytes(hlo_text: str, default_group: int) -> Dict[str, float]:
+    """Per-chip bytes moved on ICI, by collective kind."""
+    out: Dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        eol = hlo_text.find("\n", m.end())
+        line = hlo_text[m.end(): eol if eol >= 0 else len(hlo_text)]
+        n = _group_size(line, default_group)
+        nbytes = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0.0) + nbytes * _traffic_factor(kind, n)
+        out.setdefault("_count", 0.0)
+        out["_count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # whole-program FLOPs (all chips)
+    hbm_bytes: float             # whole-program HBM traffic (all chips)
+    coll_bytes_per_chip: float   # per-chip ICI traffic
+    chips: int
+    model_flops: float = 0.0     # 6*N*D useful FLOPs for the workload
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * hw.PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * hw.HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / hw.ICI_BW_PER_LINK
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak the USEFUL flops achieve at the roofline step
+        time — the score: model_flops / (step_time * chips * peak)."""
+        t = self.step_time
+        if not t:
+            return 0.0
+        return self.model_flops / (t * self.chips * hw.PEAK_FLOPS_BF16)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE); decode counts one token/seq."""
+    from repro.models.params import param_count
+    from repro.models import build
+    n_params = param_count(build(cfg).schema())
+    n_active = n_params
+    if cfg.num_experts:
+        # replace routed-expert params with the activated fraction
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        moe_layers = cfg.num_layers - cfg.first_dense_layers
+        routed = moe_layers * cfg.num_experts * per_expert
+        active = moe_layers * cfg.num_experts_per_tok * per_expert
+        n_active = n_params - routed + active
+    # embeddings don't multiply
+    n_active -= cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq

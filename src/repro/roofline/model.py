@@ -1,0 +1,458 @@
+"""Analytic roofline cost model for every (architecture x shape) cell.
+
+Why analytic: XLA's ``cost_analysis()`` on the compiled partitioned module
+counts rolled ``while`` bodies ONCE, so any scanned layer stack / gradient
+accumulation / chunked attention is undercounted by the trip count (verified
+in tests/test_roofline.py, which also validates these formulas against
+``lowered.cost_analysis()`` on small UNROLLED configs, where XLA's count is
+exact).  The dry-run still records the raw compiled cost_analysis and the
+parsed collective inventory as cross-checks (EXPERIMENTS.md §Dry-run).
+
+All formulas count matmul FLOPs as 2mnk; elementwise work is ignored
+(<1% for these shapes).  Traffic formulas are stated next to each term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.roofline import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    pod: int
+    data: int
+    model: int
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp(self) -> int:  # total data-parallel ways
+        return self.pod * self.data
+
+
+SINGLE_POD = MeshSpec(pod=1, data=16, model=16)
+MULTI_POD = MeshSpec(pod=2, data=16, model=16)
+
+
+# ---------------------------------------------------------------------------
+# per-token forward FLOPs by family
+# ---------------------------------------------------------------------------
+
+def _attn_flops_per_tok(cfg: ModelConfig, kv_len: float) -> float:
+    """QKVO projections + score/value contractions for ONE query token."""
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cfg.attention_type == "mla":
+        qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        proj = 2 * d * (cfg.q_lora_rank or d)
+        if cfg.q_lora_rank:
+            proj += 2 * cfg.q_lora_rank * h * qk
+        proj += 2 * d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+        # k/v expansion from the latent (train/prefill) — or the absorbed
+        # q/out projections (decode); either way 2 x lora x h x dims
+        proj += 2 * cfg.kv_lora_rank * h * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+        proj += 2 * h * cfg.v_head_dim * d
+        sc = 2 * h * qk * kv_len + 2 * h * cfg.v_head_dim * kv_len
+        return proj + sc
+    proj = 2 * d * h * hd + 2 * 2 * d * kh * hd + 2 * h * hd * d
+    sc = 2 * 2 * h * hd * kv_len
+    return proj + sc
+
+
+def _mlp_flops_per_tok(cfg: ModelConfig) -> float:
+    mults = 3 if cfg.mlp_gated else 2
+    return 2 * mults * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops_per_tok(cfg: ModelConfig) -> float:
+    act = cfg.num_experts_per_tok + cfg.num_shared_experts
+    return (2 * 3 * cfg.d_model * cfg.moe_d_ff * act
+            + 2 * cfg.d_model * cfg.num_experts)
+
+
+def _mamba_flops_per_tok(cfg: ModelConfig, chunk: int = 256) -> float:
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    proj = 2 * cfg.d_model * (2 * di + 2 * n + di // cfg.ssm_headdim)
+    # SSD: B/C contractions (2*di*n each) + intra-chunk quadratic (~2*di*Q)
+    ssd = 2 * di * n * 2 + 2 * di * chunk
+    out = 2 * di * cfg.d_model
+    return proj + ssd + out
+
+
+def _mlstm_flops_per_tok(cfg: ModelConfig, chunk: int = 256) -> float:
+    from repro.models.ssm import mlstm_inner
+    di = mlstm_inner(cfg)
+    dk = di // cfg.num_heads
+    up = 2 * cfg.d_model * 2 * di
+    qkv = 2 * 3 * di * dk
+    # chunkwise cell: intra-chunk quadratic (2*Q*(dk+dv) per tok) + state ops
+    cell = 2 * chunk * 2 * dk * cfg.num_heads + 2 * 2 * dk * dk * cfg.num_heads
+    down = 2 * di * cfg.d_model
+    return up + qkv + cell + down
+
+
+def _slstm_flops_per_tok(cfg: ModelConfig) -> float:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    return 2 * d * 4 * d + 2 * 4 * h * hd * hd + 2 * d * d
+
+
+def fwd_flops_per_layer_tok(cfg: ModelConfig, layer_idx: int,
+                            kv_len: float) -> float:
+    if cfg.family == "xlstm":
+        per = cfg.slstm_every
+        if (layer_idx % per) == per - 1:
+            return _slstm_flops_per_tok(cfg)
+        return _mlstm_flops_per_tok(cfg)
+    if cfg.family == "hybrid":
+        return _mamba_flops_per_tok(cfg)  # shared attn handled separately
+    # decoder/encdec transformer layer
+    if cfg.local_global_pattern:
+        per = cfg.local_global_pattern + 1
+        is_global = (layer_idx % per) == per - 1
+        eff = kv_len if is_global else min(kv_len, cfg.window_size or kv_len)
+    elif cfg.window_size:
+        eff = min(kv_len, cfg.window_size)
+    else:
+        eff = kv_len
+    a = _attn_flops_per_tok(cfg, eff)
+    if cfg.num_experts and layer_idx >= cfg.first_dense_layers:
+        return a + _moe_flops_per_tok(cfg)
+    return a + _mlp_flops_per_tok(cfg)
+
+
+def fwd_flops_per_token(cfg: ModelConfig, kv_len: float,
+                        avg_q_len: Optional[float] = None) -> float:
+    """Forward FLOPs for one (decoder) token.
+
+    For train/prefill over a sequence of length S, causal attention sees an
+    average kv_len of (S+1)/2 — pass avg_q_len=S and kv_len=S.
+    """
+    eff_kv = (kv_len + 1) / 2 if avg_q_len else kv_len
+    total = sum(fwd_flops_per_layer_tok(cfg, i, eff_kv)
+                for i in range(cfg.num_layers))
+    if cfg.family == "hybrid":
+        n_attn = cfg.num_layers // cfg.attn_every
+        total += n_attn * (_attn_flops_per_tok(cfg, eff_kv)
+                           + _mlp_flops_per_tok(cfg)
+                           + 2 * 2 * cfg.d_model * cfg.lora_rank)
+    total += 2 * cfg.d_model * cfg.vocab_size  # logits
+    return total
+
+
+def _encoder_flops(cfg: ModelConfig, batch: int) -> float:
+    """whisper encoder over the (stub-embedded) frames."""
+    if cfg.family != "encdec":
+        return 0.0
+    f = cfg.encoder_frames
+    per_tok = (_attn_flops_per_tok(cfg, f) + _mlp_flops_per_tok(cfg))
+    return batch * f * per_tok * cfg.encoder_layers
+
+
+def _cross_attn_flops(cfg: ModelConfig, tokens: float) -> float:
+    if cfg.family != "encdec":
+        return 0.0
+    d, h, hd, f = cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.encoder_frames
+    per_tok = 2 * d * h * hd * 2 + 2 * 2 * h * hd * f  # q,o + scores/values
+    return tokens * per_tok * cfg.num_layers
+
+
+def _attn_quad_flops_per_tok(cfg: ModelConfig, kv_len: float) -> float:
+    """Just the score/value contractions (NOT routed through dense())."""
+    total = 0.0
+    for i in range(cfg.num_layers):
+        if cfg.family in ("xlstm", "hybrid"):
+            continue
+        if cfg.local_global_pattern:
+            per = cfg.local_global_pattern + 1
+            eff = kv_len if (i % per) == per - 1 else min(
+                kv_len, cfg.window_size or kv_len)
+        elif cfg.window_size:
+            eff = min(kv_len, cfg.window_size)
+        else:
+            eff = kv_len
+        if cfg.attention_type == "mla":
+            qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            total += 2 * cfg.num_heads * (qk + cfg.v_head_dim) * eff
+        else:
+            total += 2 * 2 * cfg.num_heads * cfg.head_dim * eff
+    if cfg.family == "hybrid":
+        n_attn = cfg.num_layers // cfg.attn_every
+        total += n_attn * 2 * 2 * cfg.num_heads * cfg.head_dim * kv_len
+    return total
+
+
+def matmul_mode_mult(cfg: ModelConfig) -> float:
+    """FLOP multiplier for dense()-routed matmuls under the active mode.
+
+    bp8 bitplane: 8x inner-dim expansion; bp8_lowrank: rank(LUT)-wide.
+    MoE expert einsums and attention contractions stay native (bf16)."""
+    if cfg.matmul_mode == "bp8":
+        return 8.0
+    if cfg.matmul_mode == "bp8_lowrank":
+        from repro.core.bp_matmul import lut_rank
+        return float(lut_rank())
+    return 1.0
+
+
+def cell_flops(cfg: ModelConfig, shape: ShapeConfig, remat: bool = True,
+               mm_mult: Optional[float] = None) -> Dict[str, float]:
+    """Total HLO-equivalent FLOPs for one step of this cell.
+
+    Under bp8 modes the *forward* (and remat re-forward) dense matmuls blow
+    up by ``mm_mult``; the STE backward runs native bf16 (2x fwd)."""
+    b, s = shape.global_batch, shape.seq_len
+    prefix = cfg.num_prefix_tokens
+    if mm_mult is None:
+        mm_mult = matmul_mode_mult(cfg)
+    kv = s + prefix
+
+    def fwd_tokens(tokens, avg):
+        base = tokens * fwd_flops_per_token(cfg, kv, avg_q_len=avg)
+        base += _encoder_flops(cfg, b) + _cross_attn_flops(
+            cfg, tokens if shape.kind != "decode" else b)
+        if mm_mult == 1.0:
+            return base, base
+        eff = (kv + 1) / 2 if avg else kv
+        other = tokens * (_attn_quad_flops_per_tok(cfg, eff)
+                          + 2 * cfg.d_model * cfg.vocab_size)
+        if cfg.num_experts:  # expert einsums stay native
+            act = cfg.num_experts_per_tok + cfg.num_shared_experts
+            moe_layers = cfg.num_layers - cfg.first_dense_layers
+            other += tokens * moe_layers * 2 * 3 * cfg.d_model * \
+                cfg.moe_d_ff * act
+        mm = base - other
+        return mm * mm_mult + other, base
+
+    if shape.kind == "train":
+        tokens = b * (s + prefix)
+        fwd_eff, fwd_base = fwd_tokens(tokens, avg=s)
+        refwd = fwd_eff if remat else 0.0
+        total = fwd_eff + 2.0 * fwd_base + refwd  # fwd + bwd(STE bf16) + remat
+        return {"total": total, "fwd": fwd_eff,
+                "mult": total / fwd_base if fwd_base else 0.0}
+    if shape.kind == "prefill":
+        tokens = b * (s + prefix)
+        fwd_eff, _ = fwd_tokens(tokens, avg=s)
+        return {"total": fwd_eff, "fwd": fwd_eff, "mult": 1.0}
+    # decode: one token against a cache of length s
+    fwd_eff, _ = fwd_tokens(b, avg=None)
+    return {"total": fwd_eff, "fwd": fwd_eff, "mult": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic
+# ---------------------------------------------------------------------------
+
+def param_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    from repro.models import build
+    from repro.models.params import param_count
+    return param_count(build(cfg).schema()) * dtype_bytes
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, length: int) -> float:
+    if cfg.family == "xlstm":
+        from repro.models.ssm import mlstm_inner
+        di = mlstm_inner(cfg)
+        dk = di // cfg.num_heads
+        n_m = cfg.num_layers - cfg.num_layers // cfg.slstm_every
+        return n_m * batch * cfg.num_heads * dk * dk * 4.0
+    per_tok = 0.0
+    state = 0.0
+    if cfg.family == "hybrid":
+        di = cfg.ssm_expand * cfg.d_model
+        state = cfg.num_layers * batch * (di // cfg.ssm_headdim) * \
+            cfg.ssm_headdim * cfg.ssm_state * 4.0
+        n_attn = cfg.num_layers // cfg.attn_every
+        per_tok = n_attn * 2 * cfg.num_kv_heads * cfg.head_dim * 2.0
+    elif cfg.attention_type == "mla":
+        per_tok = cfg.num_layers * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * 2.0
+    else:
+        per_tok = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2.0
+    if cfg.family == "encdec":  # cached per-layer cross K/V over the frames
+        state += (cfg.num_layers * batch * cfg.encoder_frames * 2 *
+                  cfg.num_kv_heads * cfg.head_dim * 2.0)
+    return state + per_tok * batch * length
+
+
+#: Activation-traffic coefficient: bytes moved per token per layer per
+#: d_model unit.  ~10 tensor read/writes fwd (norms, qkv, scores path, mlp
+#: in/out) in bf16; bwd ~2x; remat adds ~1x fwd.
+ACT_RW_FWD = 10 * 2
+ACT_RW_TRAIN = ACT_RW_FWD * 4
+
+
+def cell_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                   accum: int = 1, moment_bytes: int = 4) -> Dict[str, float]:
+    """Whole-fleet HBM traffic per step (sum over chips)."""
+    b, s = shape.global_batch, shape.seq_len
+    p = param_bytes(cfg)  # bf16
+    if shape.kind == "train":
+        tokens = b * s
+        # each microbatch reads weights fwd + bwd (regather under FSDP)
+        weights = p * 2 * accum
+        # optimizer: read p, m, v, grad; write p, m, v (grad fp32)
+        n_params = p / 2
+        opt = n_params * (2 + 2 * moment_bytes + 4 + 2 + 2 * moment_bytes)
+        acts = tokens * cfg.d_model * ACT_RW_TRAIN * cfg.num_layers
+        total = weights + opt + acts
+        return {"total": total, "weights": weights, "opt": opt, "acts": acts}
+    if shape.kind == "prefill":
+        tokens = b * s
+        weights = p
+        acts = tokens * cfg.d_model * ACT_RW_FWD * cfg.num_layers
+        cache = kv_cache_bytes(cfg, b, s)  # written once
+        return {"total": weights + acts + cache, "weights": weights,
+                "acts": acts, "cache": cache}
+    # decode: read all (sharded) weights + the whole cache, once per token
+    weights = p
+    cache = kv_cache_bytes(cfg, b, s)
+    if cfg.window_size:  # SWA layers only read the window
+        if cfg.local_global_pattern:
+            per = cfg.local_global_pattern + 1
+            frac_global = 1.0 / per
+        else:
+            frac_global = 0.0
+        eff = frac_global + (1 - frac_global) * min(1.0, cfg.window_size / s)
+        cache = cache * eff
+    acts = b * cfg.d_model * ACT_RW_FWD * cfg.num_layers
+    return {"total": weights + cache + acts, "weights": weights,
+            "cache": cache, "acts": acts}
+
+
+# ---------------------------------------------------------------------------
+# collective traffic (per chip)
+# ---------------------------------------------------------------------------
+
+def cell_collective_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                          mesh: MeshSpec, accum: int = 1,
+                          act_bytes: int = 2, grad_bytes: int = 4,
+                          tp_ar_per_layer: int = 4) -> Dict[str, float]:
+    """Per-chip ICI bytes per step under the implemented sharding:
+
+    train:  FSDP all-gather of bf16 params per microbatch (fwd+bwd)
+            + grad all-reduce over (pod x data)
+            + TP all-reduces on activations (bf16 in the lowered program:
+              activations stay bf16 through ``dense``), 2 fwd + 2 bwd per
+              layer by default
+    prefill/decode: TP all-reduces on activations (+ softmax partials for
+            the sequence-sharded cache).
+
+    The knobs (act_bytes, grad_bytes, tp_ar_per_layer) parameterise the
+    §Perf hillclimb iterations.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    p = param_bytes(cfg)
+    d = mesh.dp
+    t = mesh.model
+    out: Dict[str, float] = {}
+    if shape.kind == "train":
+        # FSDP: params live sharded over data; each microbatch all-gathers
+        # (p/t per chip-group); ring all-gather moves (d-1)/d of the gathered
+        # bytes per chip; twice (fwd + bwd regather).
+        if d > 1:
+            out["fsdp_allgather"] = 2 * accum * (p / t) * (d - 1) / d
+            out["grad_reduce"] = 2 * (grad_bytes * p / 2 / t) * (d - 1) / d
+        if t > 1:
+            tok_local = b * s / d
+            act = tok_local * cfg.d_model * act_bytes
+            out["tp_allreduce"] = (cfg.num_layers * tp_ar_per_layer * act *
+                                   2 * (t - 1) / t)
+        if cfg.num_experts and t > 1:
+            # EP all-to-all: each routed token crosses shards at dispatch
+            # and combine, fwd + bwd -> 4x, (t-1)/t stays off-chip
+            tok_local = b * s / d
+            moe_layers = cfg.num_layers - cfg.first_dense_layers
+            routed = tok_local * cfg.num_experts_per_tok * cfg.d_model * \
+                act_bytes
+            out["ep_all_to_all"] = moe_layers * 4 * routed * (t - 1) / t
+        return {**out, "total": sum(out.values())}
+    tok_local = (b * s if shape.kind == "prefill" else b) / max(1, d)
+    if shape.kind == "decode" and b < d:
+        tok_local = float(b)  # batch not shardable; replicated work
+    if t > 1:
+        act = tok_local * cfg.d_model * act_bytes
+        out["tp_allreduce"] = cfg.num_layers * 2 * act * 2 * (t - 1) / t
+    if cfg.num_experts and t > 1:  # EP all-to-all, fwd only (2x: disp+comb)
+        moe_layers = cfg.num_layers - cfg.first_dense_layers
+        routed = tok_local * cfg.num_experts_per_tok * cfg.d_model * act_bytes
+        out["ep_all_to_all"] = moe_layers * 2 * routed * (t - 1) / t
+    if shape.kind == "decode":
+        # sequence-sharded cache: softmax partials all-reduce (fp32, tiny) +
+        # gathering the output latent: ~ b*d_model per layer
+        out["seq_softmax"] = cfg.num_layers * b * cfg.d_model * 4 * 2 * (t - 1) / t
+    return {**out, "total": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# assembled terms
+# ---------------------------------------------------------------------------
+
+def analytic_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                  accum: int = 1, remat: bool = True,
+                  moment_bytes: int = 4) -> Dict[str, float]:
+    from repro.roofline.analysis import RooflineTerms, model_flops_estimate
+    fl = cell_flops(cfg, shape, remat=remat)
+    mem = cell_hbm_bytes(cfg, shape, mesh, accum=accum,
+                         moment_bytes=moment_bytes)
+    coll = cell_collective_bytes(cfg, shape, mesh, accum=accum)
+    terms = RooflineTerms(
+        flops=fl["total"], hbm_bytes=mem["total"],
+        coll_bytes_per_chip=coll["total"], chips=mesh.chips,
+        model_flops=model_flops_estimate(cfg, shape))
+    return {"terms": terms, "flops": fl, "hbm": mem, "coll": coll}
+
+
+# ---------------------------------------------------------------------------
+# per-device memory budget (the "fits in HBM" argument; CPU-backend
+# memory_analysis lacks TPU liveness optimisation — see DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def memory_budget_per_device(cfg: ModelConfig, shape: ShapeConfig,
+                             mesh: MeshSpec, accum: int = 1,
+                             moment_bytes: int = 4,
+                             dp_only: bool = False) -> Dict[str, float]:
+    """Bytes per device: params + optimizer + grads + live activations/cache.
+
+    Default rules shard params 2D (d_model over data x ffn/heads over
+    model); dp_only shards over data only (replicated across model).
+    Activations under full remat + layer scan: saved layer inputs
+    (L x micro_tokens_local x d x 2B) + one live layer's working set
+    (~6 tensors of micro_tokens_local x max(d, d_ff_shard) x 2B).
+    """
+    p_shards = mesh.data if dp_only else mesh.data * mesh.model
+    n_params = param_bytes(cfg) / 2.0
+    out: Dict[str, float] = {}
+    out["params_bf16"] = 2.0 * n_params / p_shards
+    if shape.kind == "train":
+        out["opt_moments"] = 2.0 * moment_bytes * n_params / p_shards
+        out["grads_fp32"] = 4.0 * n_params / p_shards
+        dp = mesh.dp * (mesh.model if dp_only else 1)
+        micro_tok = shape.global_batch * shape.seq_len / accum / dp
+        d = cfg.d_model
+        out["saved_layer_inputs"] = cfg.num_layers * micro_tok * d * 2.0
+        ff_shard = max(d, (cfg.d_ff or d) / (1 if dp_only else mesh.model))
+        out["live_layer_workspace"] = 6.0 * micro_tok * ff_shard * 2.0
+        if cfg.family == "hybrid":
+            di = cfg.ssm_expand * d
+            q = cfg.ssm_chunk
+            dtype_b = 2.0 if cfg.ssm_decay_bf16 else 4.0
+            bloc = shape.global_batch / accum / dp
+            nheads = di // cfg.ssm_headdim
+            out["ssd_decay_live"] = bloc * nheads * shape.seq_len * q * dtype_b
+    else:
+        dp = mesh.dp
+        cache = kv_cache_bytes(cfg, shape.global_batch, shape.seq_len)
+        cache_shards = (mesh.chips if shape.global_batch < dp
+                        else dp * mesh.model)
+        out["kv_cache"] = cache / cache_shards
+        tok_local = (shape.global_batch * shape.seq_len / dp
+                     if shape.kind == "prefill" else shape.global_batch)
+        out["live_activations"] = 8.0 * tok_local * cfg.d_model * 2.0
+    out["total"] = sum(out.values())
+    return out

@@ -1,0 +1,101 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+A request enters a free slot, is prefilled into that slot's region of the
+batched KV cache, and decodes in lock-step with all other slots; finished
+slots (EOS or max_tokens) are refilled from the queue.  This is the
+standard slot-based continuous batching used by production LM servers,
+reduced to a single-process reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    slots: int = 4                  # concurrent sequences
+    max_len: int = 256              # cache length per slot
+    eos_id: int = 1
+    temperature: float = 0.0        # 0 = greedy
+
+
+class ServeEngine:
+    """model: needs prefill(params, batch, cache_len) + decode_step."""
+
+    def __init__(self, model, params, cfg: ModelConfig, ecfg: EngineConfig):
+        self.model, self.params, self.cfg, self.ecfg = model, params, cfg, ecfg
+        self._decode = jax.jit(model.decode_step)
+
+    def run(self, requests: List[Request], seed: int = 0) -> Dict[int, List[int]]:
+        """Simplified lock-step scheduler: serve in waves of ``slots``."""
+        ecfg = self.ecfg
+        rng = np.random.default_rng(seed)
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        while queue:
+            wave = [queue.pop(0) for _ in range(min(ecfg.slots, len(queue)))]
+            b = len(wave)
+            plen = max(len(r.prompt) for r in wave)
+            toks = np.ones((b, plen), np.int32)  # pad with EOS/pad id 1
+            for i, r in enumerate(wave):
+                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.num_prefix_tokens:
+                batch["patches"] = jnp.zeros(
+                    (b, self.cfg.num_prefix_tokens, self.cfg.d_model),
+                    jnp.bfloat16)
+            if self.cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (b, self.cfg.encoder_frames, self.cfg.d_model),
+                    jnp.bfloat16)
+            logits, cache = jax.jit(
+                self.model.prefill, static_argnums=2)(
+                    self.params, batch, ecfg.max_len)
+            pos = plen + self.cfg.num_prefix_tokens
+            live = np.ones((b,), bool)
+            steps = max(r.max_new_tokens for r in wave)
+            cur = self._sample(logits, rng)
+            for i, r in enumerate(wave):
+                r.out_tokens.append(int(cur[i]))
+            for _ in range(steps - 1):
+                logits, cache = self._decode(self.params,
+                                             jnp.asarray(cur)[:, None],
+                                             cache, jnp.int32(pos))
+                pos += 1
+                cur = self._sample(logits, rng)
+                for i, r in enumerate(wave):
+                    if live[i]:
+                        tok = int(cur[i])
+                        r.out_tokens.append(tok)
+                        if tok == ecfg.eos_id or len(r.out_tokens) >= r.max_new_tokens:
+                            live[i] = False
+                if not live.any():
+                    break
+            for r in wave:
+                r.done = True
+                results[r.rid] = r.out_tokens
+        return results
+
+    def _sample(self, logits, rng) -> np.ndarray:
+        if self.ecfg.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, -1), np.int32)
+        p = jax.nn.softmax(logits / self.ecfg.temperature, axis=-1)
+        p = np.asarray(p, np.float64)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([rng.choice(len(pi), p=pi) for pi in p], np.int32)

@@ -1,0 +1,93 @@
+"""Distributed train step: microbatch gradient accumulation + AdamW.
+
+The global batch is reshaped to (accum, micro, ...) and scanned: activation
+memory is bounded by one microbatch while arithmetic intensity per step is
+unchanged.  Remat (per layer, inside the model's layer scan) and the
+vocab-chunked cross-entropy keep the peak footprint flat in depth and vocab.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.optim.optimizer import (OptimizerConfig, adamw_update,
+                                   init_opt_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    accum_steps: int           # gradient accumulation steps
+    micro_batch: int           # global microbatch size
+
+    @staticmethod
+    def for_shape(cfg: ModelConfig, shape: ShapeConfig, data_shards: int,
+                  target_tokens_per_shard: int = 16_384,
+                  act_budget_bytes: float = 6e9,
+                  seq_shards: int = 1) -> "TrainPlan":
+        """Pick grad-accumulation so the remat-saved layer inputs
+        (num_layers x micro_tokens_local x d_model x 2B / seq_shards) fit in
+        ``act_budget_bytes`` of HBM.  ``seq_shards`` > 1 models sequence
+        parallelism (saved activations sharded over the model axis)."""
+        cap = act_budget_bytes * seq_shards / (
+            max(1, cfg.num_layers) * cfg.d_model * 2.0)
+        target = int(min(target_tokens_per_shard, max(cap, shape.seq_len // 8)))
+        per_shard = max(1, shape.global_batch // data_shards)
+        micro_per_shard = max(1, target // shape.seq_len)
+        accum = max(1, per_shard // micro_per_shard)
+        while shape.global_batch % accum:
+            accum -= 1
+        return TrainPlan(accum_steps=accum,
+                         micro_batch=shape.global_batch // accum)
+
+
+def make_train_step(model, opt_cfg: OptimizerConfig, plan: TrainPlan):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, micro):
+        loss, metrics = model.loss(params, micro)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        accum = plan.accum_steps
+
+        def reshape(x):
+            return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+        micro_batches = jax.tree.map(reshape, batch)
+
+        def acc_body(carry, micro):
+            gsum, lsum = carry
+            (loss, _), g = grad_fn(params, micro)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + loss), None
+
+        gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if accum > 1:
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (gzero, jnp.float32(0.0)),
+                                           micro_batches)
+        else:
+            (gsum, lsum), _ = acc_body((gzero, jnp.float32(0.0)),
+                                       jax.tree.map(lambda x: x[0], micro_batches))
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        loss = lsum / accum
+        new_params, new_opt, om = adamw_update(params, grads,
+                                               state["opt"], opt_cfg)
+        metrics = {"loss": loss, **om, "step": new_opt["step"]}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(model, key, opt_cfg: OptimizerConfig):
+    from repro.models.params import init_tree
+    params = init_tree(model.schema(), key)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}

@@ -1,0 +1,89 @@
+"""Training loop: data + step + checkpointing + fault tolerance.
+
+Single-process reference loop (device count agnostic — the same code runs
+under a 1-chip test mesh or the 512-chip production mesh; only the mesh and
+shardings differ).  Auto-resumes from the newest checkpoint; saves
+asynchronously every ``ckpt_every`` steps; feeds the straggler monitor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import DataConfig, batch_at
+from repro.optim.optimizer import OptimizerConfig
+from repro.runtime.fault_tolerance import (FailureInjector, StragglerMonitor)
+from repro.train.train_step import TrainPlan, init_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    metrics_path: Optional[str] = None   # JSONL telemetry (utils.metrics)
+
+
+def train(model, cfg: ModelConfig, shape: ShapeConfig,
+          tcfg: TrainerConfig, opt_cfg: Optional[OptimizerConfig] = None,
+          injector: Optional[FailureInjector] = None,
+          step_fn=None, state=None,
+          on_metrics: Optional[Callable[[int, Dict], None]] = None):
+    """Returns (state, history).  Restartable: call again after a crash and
+    it resumes from the newest checkpoint."""
+    opt_cfg = opt_cfg or OptimizerConfig(total_steps=tcfg.total_steps,
+                                         warmup_steps=5)
+    plan = TrainPlan.for_shape(cfg, shape, data_shards=1)
+    step_fn = step_fn or jax.jit(make_train_step(model, opt_cfg, plan))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+                      global_batch=shape.global_batch, seed=tcfg.seed)
+
+    start = 0
+    if state is None:
+        state = init_state(model, jax.random.key(tcfg.seed), opt_cfg)
+        if tcfg.ckpt_dir:
+            latest = ckpt.latest_step(tcfg.ckpt_dir)
+            if latest is not None:
+                state = ckpt.restore(tcfg.ckpt_dir, latest, state)
+                start = latest
+    from repro.utils.metrics import MetricsLogger
+    monitor = StragglerMonitor()
+    logger = MetricsLogger(tcfg.metrics_path)
+    history = []
+    pending = None
+    for step in range(start, tcfg.total_steps):
+        if injector is not None:
+            injector.maybe_fail(step)
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in batch_at(dcfg, step).items()}
+        t0 = time.time()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        straggler = monitor.observe(step, dt)
+        logger.log(step + 1, loss=loss, dt=dt,
+                   grad_norm=metrics.get("grad_norm", 0.0),
+                   straggler=int(straggler))
+        history.append({"step": step + 1, "loss": loss, "dt": dt})
+        if on_metrics:
+            on_metrics(step + 1, metrics)
+        if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
+            if pending is not None:
+                pending.join()
+            pending = ckpt.save(tcfg.ckpt_dir, step + 1, state,
+                                keep=tcfg.keep, blocking=False)
+    if pending is not None:
+        pending.join()
+    if tcfg.ckpt_dir and tcfg.total_steps > start:
+        ckpt.save(tcfg.ckpt_dir, tcfg.total_steps, state, keep=tcfg.keep)
+    logger.close()
+    return state, history

@@ -1,0 +1,39 @@
+"""Reproduction of the paper's accuracy claims (Sec. III) with tolerances."""
+import numpy as np
+import pytest
+
+from benchmarks import accuracy
+
+
+def test_e4m3_value_count():
+    """Paper: 'the ideal FP64 format has 119 distinctive positive numbers'."""
+    _, derived = accuracy.fig5_mapping()
+    assert derived["n_values"] == 119
+
+
+def test_fig5_mapping_errors():
+    _, d = accuracy.fig5_mapping()
+    # paper: FP8 0.21%, BP10 1.19%
+    assert d["fp8"] == pytest.approx(0.0021, rel=0.05)
+    assert d["bp10"] == pytest.approx(0.0119, rel=0.15)
+
+
+def test_fig6_multiplication_errors():
+    _, d = accuracy.fig6_multiplication()
+    # paper: FP8 0.03%, BP10 0.30%
+    assert d["fp8"] < 0.001
+    assert d["bp10"] == pytest.approx(0.0030, rel=0.35)
+
+
+def test_fig7_frobenius_curve():
+    _, d = accuracy.fig7_frobenius(dims=(4, 64, 512), trials=60, seed=1)
+    # paper: 9.42% @ 4x4 down to 1.81% @ 512x512, monotone decreasing
+    assert d[4] == pytest.approx(0.0942, rel=0.15)
+    assert d[512] == pytest.approx(0.0181, rel=0.15)
+    assert d[4] > d[64] > d[512]
+
+
+def test_fig7_error_cancellation():
+    """Positive/negative errors cancel: per-element error shrinks with N."""
+    _, d = accuracy.fig7_frobenius(dims=(8, 256), trials=30, seed=2)
+    assert d[256] < d[8] / 2

@@ -1,0 +1,76 @@
+"""Bent-Pyramid dataset structure and invariants."""
+import numpy as np
+import pytest
+
+from repro.core import bp
+
+
+@pytest.fixture(scope="module")
+def datasets():
+    return bp.bent_pyramid_datasets()
+
+
+def test_published_examples(datasets):
+    right, left = datasets
+    # the two examples printed in the OISMA paper (Sec. III-B)
+    assert "".join(map(str, right.bitstreams[3])) == "0000011100"
+    assert "".join(map(str, left.bitstreams[6])) == "0111111000"
+    assert "".join(map(str, right.bitstreams_bp8[3])) == "00001110"
+    assert "".join(map(str, left.bitstreams_bp8[6])) == "11111100"
+
+
+def test_structural_constraints(datasets):
+    right, left = datasets
+    # right-biased: left-most bit always zero; left-biased: right-most zero
+    assert (right.bitstreams[:, 0] == 0).all()
+    assert (left.bitstreams[:, -1] == 0).all()
+    # level n has exactly n ones
+    assert (right.bitstreams.sum(1) == np.arange(10)).all()
+    assert (left.bitstreams.sum(1) == np.arange(10)).all()
+
+
+def test_nested_pyramid(datasets):
+    for ds in datasets:
+        for n in range(1, 9):
+            lo, hi = ds.starts[n], ds.starts[n] + n
+            lo2, hi2 = ds.starts[n + 1], ds.starts[n + 1] + n + 1
+            assert lo2 <= lo and hi2 >= hi, (ds.name, n)
+
+
+def test_bp8_multiplication_identity(datasets):
+    """BP8 compressed interpretation: all products identical to BP10."""
+    right, left = datasets
+    lut10 = right.bitstreams.astype(int) @ left.bitstreams.astype(int).T
+    lut8 = right.bitstreams_bp8.astype(int) @ left.bitstreams_bp8.astype(int).T
+    assert (lut10 == lut8).all()
+
+
+def test_paper_example_product(datasets):
+    """0.3 (right) x 0.6 (left) -> 0.2 (Fig. 3 example)."""
+    lut = bp.mult_lut(*datasets)
+    assert lut[3, 6] == 2
+
+
+def test_sc_multiply_matches_lut(datasets):
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 10, (50,))
+    y = rng.integers(0, 10, (50,))
+    lut = bp.mult_lut(*datasets)
+    got = bp.sc_multiply(x, y)
+    assert (got == lut[x, y]).all()
+    got8 = bp.sc_multiply(x, y, bits=8)
+    assert (got8 == lut[x, y]).all()
+
+
+def test_optimizer_respects_pins():
+    right, left = bp.optimize_datasets(pins_right={3: 5}, pins_left={6: 1},
+                                       iters=5)
+    assert right.starts[3] == 5
+    assert left.starts[6] == 1
+
+
+def test_quantize_levels():
+    x = np.array([0.0, 0.04, 0.051, 0.54, 0.949, 0.951, 1.0])
+    lv = bp.quantize_to_levels(x)
+    # nearest level; ties round half-to-even (np.rint); >0.95 clips to 9
+    assert lv.tolist() == [0, 0, 1, 5, 9, 9, 9]

@@ -1,0 +1,117 @@
+"""Equivalence of the BP matmul implementations + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bp, bp_matmul as bpm
+from repro.core.quantize import quantize_bp
+
+
+def test_lut_rank_full():
+    assert bpm.lut_rank() == 8  # BP8: rank == effective bit-width
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 4, 4), (16, 40, 8), (33, 65, 17)])
+def test_impl_agreement(m, k, n, rng):
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    y = rng.standard_normal((k, n)).astype(np.float32)
+    a = bpm.bp_matmul(jnp.asarray(x), jnp.asarray(y), impl="lut")
+    b = bpm.bp_matmul(jnp.asarray(x), jnp.asarray(y), impl="bitplane")
+    c = bpm.bp_matmul(jnp.asarray(x), jnp.asarray(y), impl="lowrank")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-3)
+
+
+def test_bitplane_matches_bitstream_semantics(rng):
+    """popcount(AND(bitstreams)) == bitplane dot, on the level domain."""
+    xl = rng.integers(0, 10, (12, 20))
+    yl = rng.integers(0, 10, (20, 7))
+    ref = bp.bp_matmul_bitplane(xl / 10.0 + 1e-9, yl / 10.0 + 1e-9)
+    lut = bp.mult_lut()
+    want = lut[xl[:, :, None], yl[None, :, :]].sum(1) / 10.0
+    np.testing.assert_allclose(ref, want, atol=1e-9)
+
+
+def test_ste_gradients(rng):
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+
+    def f(x, y):
+        return jnp.sum(bpm.bp_matmul_ste(x, y) ** 2)
+
+    gx, gy = jax.grad(f, argnums=(0, 1))(x, y)
+    assert jnp.isfinite(gx).all() and jnp.isfinite(gy).all()
+    assert float(jnp.abs(gx).sum()) > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.integers(2, 48), st.integers(2, 12),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_error_bound(m, k, n, seed):
+    """|BP(x@y) - x@y| is bounded by k * max_scales * lut_max_err / 10."""
+    r = np.random.default_rng(seed)
+    x = r.uniform(-1, 1, (m, k)).astype(np.float32)
+    y = r.uniform(-1, 1, (k, n)).astype(np.float32)
+    got = np.asarray(bpm.bp_matmul(jnp.asarray(x), jnp.asarray(y)))
+    exact = x @ y
+    lut = bp.mult_lut()
+    # worst per-product error: LUT error + quantisation error (<= 0.05+0.05)
+    err_lut = np.abs(lut / 10.0 -
+                     np.outer(np.arange(10), np.arange(10)) / 100.0).max()
+    sx = np.abs(x).max()
+    sy = np.abs(y).max()
+    bound = k * sx * sy * (err_lut + 0.11)
+    assert np.abs(got - exact).max() <= bound + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 2 ** 31 - 1))
+def test_property_quantize_roundtrip(k, seed):
+    """dequantize(quantize(x)) is within 0.1*scale: half a level (0.05)
+    everywhere except the top clip region [0.95, 1.0] -> 0.9 (0.1)."""
+    r = np.random.default_rng(seed)
+    x = r.uniform(-3, 3, (k,)).astype(np.float32)
+    q = quantize_bp(jnp.asarray(x))
+    back = np.asarray(q.dequantize())
+    scale = np.abs(x).max()
+    assert np.abs(back - x).max() <= 0.1 * scale + 1e-6
+
+
+def test_zero_and_sign_handling():
+    x = jnp.asarray([[0.0, -1.0], [0.5, 0.0]], jnp.float32)
+    y = jnp.asarray([[1.0, 0.0], [0.0, -1.0]], jnp.float32)
+    got = np.asarray(bpm.bp_matmul(x, y))
+    exact = np.asarray(x) @ np.asarray(y)
+    # max-magnitude entries clip to level 9 (0.9): error up to 0.1+0.1
+    assert np.abs(got - exact).max() <= 0.2 + 1e-6
+    assert got[0, 1] > 0  # (-1)*(-1)
+    assert got[1, 1] == 0  # rows/cols of zeros stay exact
+
+
+def test_truncated_rank_fidelity(rng):
+    """Rank-3 truncated LUT execution (§Perf C): stays within the paper's
+    1.81% Frobenius envelope vs the exact product AND tracks the bit-exact
+    OISMA output far better than rank-1 (which collapses to a plain
+    quantised matmul, erasing the quasi-stochastic error signature)."""
+    x = rng.random((256, 256)).astype(np.float32)
+    y = rng.random((256, 256)).astype(np.float32)
+    exact = x @ y
+    qx, qy = quantize_bp(jnp.asarray(x)), quantize_bp(jnp.asarray(y))
+    xl = qx.levels.astype(jnp.int32)
+    yl = qy.levels.astype(jnp.int32)
+    sx = np.asarray(qx.scale).item()
+    sy = np.asarray(qy.scale).item()
+    out3 = np.asarray(bpm.bp_matmul_lowrank(xl, yl, rank=3)) * sx * sy
+    rel = np.linalg.norm(out3 - exact) / np.linalg.norm(exact)
+    assert rel < 0.025, rel
+    bp_exact = np.asarray(bpm.bp_matmul_bitplane(xl, yl, dtype=jnp.float32))
+    fid3 = np.linalg.norm(
+        np.asarray(bpm.bp_matmul_lowrank(xl, yl, rank=3)) - bp_exact
+    ) / np.linalg.norm(bp_exact)
+    fid1 = np.linalg.norm(
+        np.asarray(bpm.bp_matmul_lowrank(xl, yl, rank=1)) - bp_exact
+    ) / np.linalg.norm(bp_exact)
+    assert fid3 < 0.02, fid3
+    assert fid3 < fid1 / 2

@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import quantize_bp
+from repro.kernels import bp_matmul as k
+from repro.kernels import ops, ref
+
+
+def _codes(rng, shape):
+    return jnp.asarray(rng.integers(-9, 10, shape, dtype=np.int8))
+
+
+@pytest.mark.parametrize("m,kk,n", [
+    (128, 128, 128), (256, 128, 128), (128, 256, 384), (8, 128, 128),
+])
+def test_kernel_matches_oracle_shapes(m, kk, n, rng):
+    x = _codes(rng, (m, kk))
+    y = _codes(rng, (kk, n))
+    got = k.bp_matmul_pallas(x, y, block_m=min(128, m), block_n=128,
+                             block_k=128, interpret=True)
+    want = ref.bp_matmul_ref(x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_compute_dtypes(dtype, rng):
+    x = _codes(rng, (128, 128))
+    y = _codes(rng, (128, 128))
+    got = k.bp_matmul_pallas(x, y, compute_dtype=dtype, interpret=True)
+    want = ref.bp_matmul_ref(x, y)
+    # bf16 planes are exact 0/1 so the integer result is still exact
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_padding_path(rng):
+    x = _codes(rng, (100, 300))
+    y = _codes(rng, (300, 130))
+    got = ops.bp_matmul_codes(x, y)
+    want = ref.bp_matmul_ref(x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_oisma_matmul_end_to_end(rng):
+    x = jnp.asarray(rng.standard_normal((64, 96)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((96, 32)), jnp.float32)
+    from repro.core import bp_matmul as bpm
+    got = ops.oisma_matmul(x, y)
+    want = bpm.bp_matmul(x, y, impl="lut")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 3),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_kernel_blocks(mb, kb, nb, seed):
+    r = np.random.default_rng(seed)
+    m, kk, n = mb * 64, kb * 128, nb * 128
+    x = jnp.asarray(r.integers(-9, 10, (m, kk), dtype=np.int8))
+    y = jnp.asarray(r.integers(-9, 10, (kk, n), dtype=np.int8))
+    got = k.bp_matmul_pallas(x, y, block_m=64, block_n=128, block_k=128,
+                             interpret=True)
+    want = ref.bp_matmul_ref(x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_plane_thresholds_nested():
+    for which in ("right", "left"):
+        th = k._plane_thresholds(which)
+        assert len(th) == 8
+        assert all(1 <= t <= 10 for t in th)
+
+
+@pytest.mark.parametrize("r,c", [(256, 256), (512, 64), (300, 100)])
+def test_popcount_kernel(r, c, rng):
+    bits = jnp.asarray((rng.random((r, c)) < 0.5).astype(np.int8))
+    got = ops.popcount_accumulate(bits)
+    want = ref.popcount_accumulate_ref(bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,c", [(256, 256), (512, 512), (256, 768)])
+def test_bp_quantize_kernel(m, c, rng):
+    x = jnp.asarray(rng.standard_normal((m, c)) * 3, jnp.float32)
+    scale = jnp.abs(x).max()
+    got = k.bp_quantize_pallas(x, scale, interpret=True)
+    want = ref.bp_quantize_ref(x, scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bp_quantize_kernel_matches_core(rng):
+    """Kernel codes == repro.core.quantize.quantize_bp codes."""
+    from repro.core.quantize import quantize_bp
+    from repro.kernels.ops import to_codes
+    x = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    q = quantize_bp(x)
+    got = k.bp_quantize_pallas(x, q.scale[0, 0], interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(to_codes(q)))

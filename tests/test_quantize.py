@@ -1,0 +1,62 @@
+"""Quantisation formats: E4M3 grid, BP signed quantiser, STE gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as q
+
+
+def test_e4m3_counts():
+    assert len(q.e4m3_positive_values(448.0)) == 126  # all positive finite
+    assert len(q.e4m3_positive_values(240.0)) == 119  # paper's count
+    assert len(q.e4m3_positive_values(1.0)) == 56     # Fig 4's count in [0,1]
+
+
+def test_e4m3_exact_values_fixed():
+    vals = q.e4m3_positive_values(448.0)
+    assert vals[-1] == 448.0
+    assert vals[0] == 2.0 ** -9          # smallest subnormal 0.001 * 2^-6
+    assert 1.0 in vals and 240.0 in vals
+
+
+def test_quantize_e4m3_idempotent(rng):
+    x = jnp.asarray(rng.standard_normal((64,)) * 10, jnp.float32)
+    y = q.quantize_e4m3(x)
+    z = q.quantize_e4m3(y)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(z))
+
+
+def test_quantize_e4m3_clips():
+    x = jnp.asarray([1e6, -1e6], jnp.float32)
+    y = q.quantize_e4m3(x)
+    assert y[0] == 448.0 and y[1] == -448.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_e4m3_nearest(seed):
+    r = np.random.default_rng(seed)
+    x = r.uniform(-400, 400, (32,)).astype(np.float32)
+    y = np.asarray(q.quantize_e4m3(jnp.asarray(x)))
+    grid = q.e4m3_positive_values(448.0)
+    full = np.concatenate([-grid[::-1], [0.0], grid])
+    best = full[np.abs(full[None, :] - x[:, None]).argmin(1)]
+    np.testing.assert_allclose(y, best, rtol=0, atol=0)
+
+
+def test_ste_gradients_pass_through(rng):
+    x = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    g1 = jax.grad(lambda v: jnp.sum(q.fake_quantize_bp(v) * 2))(x)
+    np.testing.assert_allclose(np.asarray(g1), 2.0)
+    g2 = jax.grad(lambda v: jnp.sum(q.fake_quantize_e4m3(v) * 3))(x)
+    np.testing.assert_allclose(np.asarray(g2), 3.0)
+
+
+def test_bp_quantize_per_axis(rng):
+    x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    qt = q.quantize_bp(x, axis=1)
+    assert qt.scale.shape == (4, 1)
+    back = qt.dequantize()
+    assert jnp.abs(back - x).max() <= 0.1 * jnp.abs(x).max() + 1e-6

@@ -1,0 +1,177 @@
+"""Data pipeline, optimizer, gradient compression, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import DataConfig, batch_at
+from repro.optim import compress
+from repro.optim.optimizer import (OptimizerConfig, adamw_update,
+                                   init_opt_state, lr_at)
+
+
+# ---------------- data ----------------
+
+def test_data_deterministic():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=4)
+    a = batch_at(cfg, 7)
+    b = batch_at(cfg, 7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = batch_at(cfg, 8)
+    assert (a["tokens"] != c["tokens"]).any()
+
+
+def test_data_host_slice_consistent():
+    """Host slices must agree with the corresponding global rows."""
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=8)
+    full = batch_at(cfg, 3)
+    part = batch_at(cfg, 3, host_slice=(2, 5))
+    np.testing.assert_array_equal(full["tokens"][2:5], part["tokens"])
+
+
+def test_data_labels_shifted():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=2)
+    b = batch_at(cfg, 0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 32)
+    assert (b["tokens"][:, 1:] == b["labels"][:, :-1]).all()
+
+
+# ---------------- optimizer ----------------
+
+def test_lr_schedule():
+    cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=10,
+                          total_steps=100)
+    assert float(lr_at(cfg, jnp.int32(5))) < 1e-3
+    assert float(lr_at(cfg, jnp.int32(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr_at(cfg, jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_adamw_reduces_quadratic():
+    cfg = OptimizerConfig(learning_rate=0.1, warmup_steps=0, total_steps=100,
+                          weight_decay=0.0)
+    params = {"w": jnp.asarray([[2.0, -3.0]])}
+    opt = init_opt_state(params, cfg)
+    for _ in range(50):
+        grads = {"w": 2 * params["w"]}
+        params, opt, m = adamw_update(params, grads, opt, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+    assert m["grad_norm"] > 0
+
+
+def test_adamw_bf16_moments():
+    cfg = OptimizerConfig(moment_dtype=jnp.bfloat16, warmup_steps=0)
+    params = {"w": jnp.ones((4, 4))}
+    opt = init_opt_state(params, cfg)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    p2, opt2, _ = adamw_update(params, {"w": jnp.ones((4, 4))}, opt, cfg)
+    assert opt2["v"]["w"].dtype == jnp.bfloat16
+    assert (np.asarray(p2["w"]) < 1.0).all()
+
+
+# ---------------- gradient compression ----------------
+
+def test_compress_roundtrip_error_feedback(rng):
+    g = {"a": jnp.asarray(rng.standard_normal((64,)), jnp.float32)}
+    res = compress.init_residual(g)
+    q, s, res = compress.compress(g, res)
+    back = compress.decompress(q, s)
+    err1 = float(jnp.abs(back["a"] - g["a"]).max())
+    assert err1 <= float(s["a"]) + 1e-6  # bounded by one quantum
+    # error feedback: the residual carries exactly the rounding error
+    np.testing.assert_allclose(np.asarray(res["a"]),
+                               np.asarray(g["a"] - back["a"]), atol=1e-6)
+
+
+def test_compress_unbiased_over_rounds(rng):
+    """Summed EF-decompressed grads converge to summed true grads."""
+    true_sum = np.zeros(32, np.float32)
+    got_sum = np.zeros(32, np.float32)
+    g0 = rng.standard_normal(32).astype(np.float32)
+    res = compress.init_residual({"g": jnp.zeros(32)})
+    for i in range(50):
+        g = {"g": jnp.asarray(g0)}
+        q, s, res = compress.compress(g, res)
+        got_sum += np.asarray(compress.decompress(q, s)["g"])
+        true_sum += g0
+    assert np.abs(got_sum - true_sum).max() / np.abs(true_sum).max() < 0.01
+
+
+# ---------------- checkpointing ----------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    ckpt.save(str(tmp_path), 5, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    back = ckpt.restore(str(tmp_path), 5, like)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    assert back["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention(tmp_path):
+    tree = {"a": jnp.ones(3)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4]
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    tree = {"a": jnp.arange(8, dtype=jnp.float32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    # corrupt the leaf file
+    leaf = os.path.join(str(tmp_path), "step_000000001", "00000.npy")
+    data = np.load(leaf)
+    data[0] = 999.0
+    np.save(leaf, data)
+    with pytest.raises(IOError, match="corruption"):
+        ckpt.restore(str(tmp_path), 1, tree)
+
+
+def test_checkpoint_async(tmp_path):
+    tree = {"a": jnp.ones((32, 32))}
+    t = ckpt.save(str(tmp_path), 7, tree, blocking=False)
+    t.join()
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+
+def test_checkpoint_reshard(tmp_path):
+    """Elastic restore: load with explicit (trivial) shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"a": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(str(tmp_path), 1, tree)
+    sh = {"a": NamedSharding(mesh, P("data", None))}
+    back = ckpt.restore(str(tmp_path), 1, tree, shardings=sh)
+    assert back["a"].sharding == sh["a"]
+    np.testing.assert_array_equal(np.asarray(back["a"]),
+                                  np.asarray(tree["a"]))
+
+
+# ---------------- metrics telemetry ----------------
+
+def test_metrics_logger_roundtrip(tmp_path):
+    from repro.utils.metrics import MetricsLogger, read_metrics, step_time_summary
+    p = str(tmp_path / "m.jsonl")
+    log = MetricsLogger(p)
+    for s in range(20):
+        log.log(s, loss=5.0 - s * 0.1, dt=0.1 + (0.5 if s == 10 else 0))
+    log.close()
+    recs = read_metrics(p)
+    assert len(recs) == 20 and recs[0]["loss"] == 5.0
+    summ = step_time_summary(p)
+    assert summ["n"] == 20 and summ["max"] > 0.5 and summ["p50"] < 0.2
+
+
+def test_metrics_logger_skips_torn_line(tmp_path):
+    from repro.utils.metrics import MetricsLogger, read_metrics
+    p = str(tmp_path / "m.jsonl")
+    log = MetricsLogger(p)
+    log.log(1, loss=1.0)
+    log.close()
+    with open(p, "a") as f:
+        f.write('{"t": 1, "host": 0, "step": 2, "loss"')  # simulated crash
+    assert len(read_metrics(p)) == 1

@@ -1,0 +1,61 @@
+"""End-to-end behaviour of the whole system (quickstart-equivalent)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.core import bp, bp_matmul
+from repro.models import build
+from repro.models.params import init_tree, param_count
+
+
+def test_end_to_end_oisma_pipeline(rng):
+    """Quantise -> in-memory stochastic multiply -> accumulate -> energy."""
+    from repro.core.oisma_cost import OISMAConfig, matmul_cost
+    x = rng.random((64, 64)).astype(np.float32)
+    y = rng.random((64, 64)).astype(np.float32)
+    out = np.asarray(bp_matmul.bp_matmul(jnp.asarray(x), jnp.asarray(y)))
+    rel = np.linalg.norm(out - x @ y) / np.linalg.norm(x @ y)
+    assert rel < 0.06  # Fig 7 territory for N=64
+    cost = matmul_cost(64, 64, 64, OISMAConfig(22, arrays=256))
+    assert cost.energy_j > 0 and cost.latency_s > 0
+
+
+def test_all_archs_have_applicable_matrix():
+    """Every (arch x shape) cell is either runnable or a documented skip."""
+    n_run = n_skip = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, reason = shape_applicable(cfg, shape)
+            if ok:
+                n_run += 1
+            else:
+                assert shape.name == "long_500k" and reason
+                n_skip += 1
+    assert n_run + n_skip == 40
+    assert n_skip == 6
+
+
+def test_param_counts_close_to_published():
+    expect = {"gemma3_12b": 12e9, "qwen2_72b": 72e9,
+              "deepseek_v2_236b": 236e9, "minicpm3_4b": 4e9}
+    for arch, n in expect.items():
+        got = param_count(build(get_config(arch)).schema())
+        assert abs(got - n) / n < 0.1, (arch, got)
+
+
+def test_bp8_is_first_class_mode():
+    """The paper's technique is a config switch on any architecture."""
+    cfg = dataclasses.replace(get_config("granite_moe_1b", smoke=True),
+                              matmul_mode="bp8")
+    model = build(cfg)
+    params = init_tree(model.schema(), jax.random.key(0))
+    from repro.launch.inputs import demo_batch
+    from repro.configs.base import ShapeConfig
+    batch = demo_batch(cfg, ShapeConfig("t", "train", 32, 2))
+    loss, _ = jax.jit(model.loss)(params, batch)
+    assert jnp.isfinite(loss)
