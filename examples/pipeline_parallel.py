@@ -1,0 +1,57 @@
+"""Pipeline parallelism demo: 4 stages on 4 forced host devices.
+
+Splits an 8-layer residual MLP into 4 pipeline stages, streams 8
+microbatches through the GPipe schedule, and checks the pipelined forward
+against the sequential reference.  Run from the repo root:
+
+    PYTHONPATH=src python examples/pipeline_parallel.py
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.pipeline import bubble_fraction, pipeline_apply, stack_stages
+
+STAGES, LAYERS_PER, MICRO, BATCH, D = 4, 2, 8, 4, 32
+
+
+def layer(w, x):
+    return x + jnp.tanh(x @ w)
+
+
+def stage_fn(stage_params, x):
+    def body(x, w):
+        return layer(w, x), None
+    x, _ = jax.lax.scan(body, x, stage_params)
+    return x
+
+
+def main():
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(
+        rng.standard_normal((STAGES * LAYERS_PER, D, D)) * 0.1, jnp.float32)
+    X = jnp.asarray(rng.standard_normal((MICRO, BATCH, D)), jnp.float32)
+
+    mesh = jax.make_mesh((STAGES,), ("stage",))
+    out = pipeline_apply(stage_fn, stack_stages(W, STAGES), X, mesh)
+
+    def seq(x):
+        def body(x, w):
+            return layer(w, x), None
+        y, _ = jax.lax.scan(body, x, W)
+        return y
+
+    ref = jax.vmap(seq)(X)
+    err = float(jnp.abs(out - ref).max())
+    print(f"stages={STAGES} microbatches={MICRO} "
+          f"bubble={bubble_fraction(STAGES, MICRO):.3f}")
+    print(f"max |pipelined - sequential| = {err:.2e}")
+    assert err < 1e-5
+
+
+if __name__ == "__main__":
+    main()

@@ -67,17 +67,22 @@ def main():
     # dry-run summary
     path = os.path.join(ROOT, "results", "dryrun.json")
     if os.path.exists(path):
+        from repro.launch.results import is_canonical
         recs = json.load(open(path))
+        # canonical sweep only: --rules / --mesh-shape experiment records
+        # share the file but are stamped and must not inflate the summary
+        recs = [r for r in recs if is_canonical(r)]
         ok = [r for r in recs if r.get("status") == "ok"]
         sk = [r for r in recs if r.get("status") == "skipped"]
         er = [r for r in recs if r.get("status") == "error"]
         print(f"\nDry-run sweep: {len(ok)} compiled OK "
               f"({len([r for r in ok if r['mesh']=='multi'])} multi-pod), "
               f"{len(sk)} documented skips, {len(er)} errors.")
-        tot_compile = sum(r.get("t_compile_s", 0) for r in ok)
-        print(f"Total compile time {tot_compile/60:.0f} min; "
-              f"max single-cell compile "
-              f"{max(r.get('t_compile_s', 0) for r in ok):.0f}s.")
+        if ok:
+            tot_compile = sum(r.get("t_compile_s", 0) for r in ok)
+            print(f"Total compile time {tot_compile/60:.0f} min; "
+                  f"max single-cell compile "
+                  f"{max(r.get('t_compile_s', 0) for r in ok):.0f}s.")
 
 
 if __name__ == "__main__":

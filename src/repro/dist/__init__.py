@@ -1,0 +1,19 @@
+"""Distributed execution: sharding rules and pipeline parallelism.
+
+Two orthogonal pieces:
+
+  * :mod:`repro.dist.sharding` — a logical-axis rules engine.  Models and
+    optimizers name their tensor dimensions ("batch", "ffn", "heads", …);
+    a ``Rules`` mapping resolves those names to mesh axes, with
+    divisibility and mesh-presence fallbacks, producing ``PartitionSpec`` /
+    ``NamedSharding`` objects for jit boundaries and in-graph constraints.
+  * :mod:`repro.dist.pipeline` — GPipe-style pipeline parallelism over a
+    dedicated "stage" mesh axis: stack layer parameters into stages, run
+    microbatches through a collective-permute schedule, and account for
+    the pipeline bubble.
+
+Neither module touches jax device state at import time (same rule as
+``repro.launch.mesh``), so the dry-run can force a 512-device host platform
+before anything else runs.
+"""
+from repro.dist import pipeline, sharding  # noqa: F401

@@ -1,0 +1,293 @@
+"""Sharding rules engine: logical axis names -> mesh PartitionSpecs.
+
+Every tensor in the system (params, optimizer moments, activations, KV
+caches, batches) is annotated with *logical* axis names — "batch", "seq",
+"ffn", "heads", … (see ``repro.models.params`` for the full vocabulary).
+A ``Rules`` mapping decides, per workload, which *mesh* axes those logical
+names shard over.  ``partition_spec`` resolves one (shape, axes) pair to a
+``jax.sharding.PartitionSpec`` under three safety fallbacks:
+
+  1. *mesh presence* — mesh axes named by a rule but absent on the current
+     mesh (e.g. "pod" on a single-pod mesh) are silently dropped;
+  2. *divisibility* — a mesh axis is only applied to a dimension it divides
+     evenly; otherwise the dimension falls back toward replication;
+  3. *each mesh axis at most once* — a mesh axis already consumed by an
+     earlier dimension of the same spec is skipped (XLA requires every mesh
+     axis to appear at most once per PartitionSpec).
+
+The same rules drive three call sites:
+
+  * jit boundaries — ``tree_shardings`` / ``named_sharding`` build
+    ``NamedSharding`` trees for ``in_shardings`` / ``out_shardings`` /
+    ``jax.device_put`` (see ``launch/dryrun.py`` and the trainer);
+  * in-graph constraints — ``shard(x, *axes)`` applies
+    ``with_sharding_constraint`` inside model code, resolving against the
+    ambient ``use_rules(mesh, rules)`` context (and is a no-op when no
+    context is active, so single-device tests need no mesh at all);
+  * presets — ``train_rules`` / ``prefill_rules`` / ``decode_rules`` are
+    the production mappings, registered in ``RULE_PRESETS`` for the
+    dry-run's ``--rules`` sharding experiments.
+
+Rules are data, not code: a preset is just a ``Rules`` dict, so sharding
+experiments (e.g. ``dp_only``) are one-line additions that never touch
+model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+#: A rule value: one mesh axis, or a tuple of mesh axes applied jointly to
+#: a single logical dimension (e.g. ("pod", "data") for the global batch).
+MeshAxes = Union[str, Tuple[str, ...]]
+
+
+class Rules(Dict[str, MeshAxes]):
+    """Mapping from logical axis names to mesh axes.
+
+    A plain dict subclass so presets stay literal and greppable::
+
+        Rules({"batch": ("pod", "data"), "ffn": "model"})
+
+    Logical names absent from the mapping (or mapped to ``None``) replicate.
+    """
+
+    def mesh_axes(self, name: Optional[str]) -> Tuple[str, ...]:
+        """The tuple of mesh axes for logical ``name`` (empty = replicate)."""
+        if name is None:
+            return ()
+        want = self.get(name)
+        if want is None:
+            return ()
+        return (want,) if isinstance(want, str) else tuple(want)
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution
+# ---------------------------------------------------------------------------
+
+def partition_spec(mesh: Mesh, rules: Mapping[str, MeshAxes],
+                   shape: Sequence[int],
+                   axes: Sequence[Optional[str]]) -> P:
+    """Resolve logical ``axes`` of a tensor of ``shape`` to a PartitionSpec.
+
+    Applies the three fallbacks documented in the module docstring: mesh
+    axes absent on ``mesh`` are dropped, a mesh axis must divide the
+    dimension it shards (checked cumulatively when several mesh axes stack
+    on one dimension), and a mesh axis already used by an earlier dimension
+    is skipped.  A dimension whose every candidate axis is rejected is
+    replicated (``None`` in the spec).
+    """
+    assert len(shape) == len(axes), (tuple(shape), tuple(axes))
+    if not isinstance(rules, Rules):
+        rules = Rules(rules)
+    sizes = dict(mesh.shape)
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        picked = []
+        remaining = int(dim)
+        for ax in rules.mesh_axes(name):
+            if ax not in sizes or ax in used:
+                continue
+            if remaining % sizes[ax]:
+                continue  # divisibility fallback: skip toward replication
+            picked.append(ax)
+            used.add(ax)
+            remaining //= sizes[ax]
+        if not picked:
+            entries.append(None)
+        elif len(picked) == 1:
+            entries.append(picked[0])
+        else:
+            entries.append(tuple(picked))
+    return P(*entries)
+
+
+def named_sharding(mesh: Mesh, rules: Mapping[str, MeshAxes],
+                   shape: Sequence[int],
+                   axes: Sequence[Optional[str]]) -> NamedSharding:
+    """``NamedSharding`` for one tensor (see ``partition_spec``)."""
+    return NamedSharding(mesh, partition_spec(mesh, rules, shape, axes))
+
+
+def tree_shardings(mesh: Mesh, rules: Mapping[str, MeshAxes],
+                   abstract: Any, axes: Any) -> Any:
+    """NamedSharding pytree for an abstract (ShapeDtypeStruct) pytree.
+
+    ``abstract`` and ``axes`` are parallel trees: each ShapeDtypeStruct leaf
+    of ``abstract`` pairs with a tuple of logical axis names in ``axes``
+    (scalars pair with the empty tuple).  This is the one-call path from a
+    model schema to jit shardings::
+
+        params_sh = tree_shardings(mesh, rules,
+                                   abstract_tree(schema), axes_tree(schema))
+    """
+    return jax.tree.map(
+        lambda a, ax: named_sharding(mesh, rules, a.shape, tuple(ax)),
+        abstract, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# Ambient rules context (in-graph sharding constraints)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """The ambient (mesh, rules) pair installed by ``use_rules``."""
+    mesh: Mesh
+    rules: Rules
+
+
+_LOCAL = threading.local()
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    """The active ``ShardCtx``, or None outside any ``use_rules`` block."""
+    return getattr(_LOCAL, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Mapping[str, MeshAxes]):
+    """Install (mesh, rules) as the ambient context for ``shard``.
+
+    Wrap the region that *traces* the computation (the first call of a
+    jitted function); the constraints are baked into the jaxpr, so steady-
+    state calls need no context.  Contexts nest; the previous one is
+    restored on exit.  Thread-local, so concurrent serve threads can trace
+    under different meshes.
+
+    Also enters ``mesh``'s own context manager: jax's jaxpr-tracing cache
+    is keyed on (function identity, avals, trace context) and would
+    otherwise replay a trace whose ``shard`` constraints captured a
+    *previous* mesh — the mesh context manager is what makes the mesh part
+    of the cache key (regression-covered by ``tests/test_multidevice.py``,
+    which traces the same train step under two meshes).
+    """
+    prev = current_ctx()
+    _LOCAL.ctx = ShardCtx(mesh, Rules(rules))
+    try:
+        with mesh:
+            yield _LOCAL.ctx
+    finally:
+        _LOCAL.ctx = prev
+
+
+def shard(x: jax.Array, *axes: Optional[str],
+          ctx: Optional[ShardCtx] = None) -> jax.Array:
+    """In-graph sharding constraint by logical axis names — or a no-op.
+
+    ``shard(x, "batch", "seq", None)`` constrains a (B, S, D) activation
+    under the ambient ``use_rules`` context (or an explicit ``ctx``).  With
+    no context active it returns ``x`` unchanged, so model code is written
+    once and runs identically on a laptop CPU and a 512-chip mesh.
+    """
+    ctx = ctx or current_ctx()
+    if ctx is None:
+        return x
+    spec = partition_spec(ctx.mesh, ctx.rules, x.shape, axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Production presets
+# ---------------------------------------------------------------------------
+
+def train_rules() -> Rules:
+    """FSDP + tensor-parallel training layout.
+
+    Batch over ("pod", "data"); the contraction-orthogonal weight dims
+    ("ffn", "heads", "kv_heads", "vocab", "experts") over "model"
+    (Megatron-style tensor parallelism); "d_model" over "data" so the
+    parameters — and, because optimizer moments inherit parameter axes
+    (``opt_state_axes``), the whole AdamW state — are ZeRO-sharded across
+    the data axis.  Activations additionally shard "seq" over "model"
+    (sequence parallelism for the norm/residual path between matmuls).
+    """
+    return Rules({
+        "batch": ("pod", "data"),
+        "seq": "model",
+        "d_model": "data",
+        "ffn": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "experts": "model",
+    })
+
+
+def prefill_rules() -> Rules:
+    """Inference prefill layout: tensor-parallel weights, data-parallel batch.
+
+    No ZeRO ("d_model" replicated): weights are read-only at inference, so
+    gathering them per step would cost collectives for no memory win that
+    the KV cache does not already dominate.  KV caches shard batch over
+    ("pod", "data") and heads over "model" via the models' cache_axes.
+    """
+    return Rules({
+        "batch": ("pod", "data"),
+        "seq": "model",
+        "ffn": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+    })
+
+
+def decode_rules(batch: int, data_size: int) -> Rules:
+    """Decode layout, adaptive to how well the batch fills the data axis.
+
+    ``batch`` is the global decode batch; ``data_size`` the "data" mesh-axis
+    size.  When the batch tiles the data axis, decode looks like prefill
+    (batch over ("pod", "data"), heads over "model").  When it cannot
+    (small-batch / long-context decode, e.g. the ``long_500k`` shape with
+    batch 1), the data axis would idle — so it is folded into model
+    parallelism instead: weight and head dims shard over ("data", "model")
+    jointly and the batch replicates.
+    """
+    if data_size <= 1 or (batch >= data_size and batch % data_size == 0):
+        return Rules({
+            "batch": ("pod", "data"),
+            "ffn": "model",
+            "heads": "model",
+            "kv_heads": "model",
+            "vocab": "model",
+        })
+    return Rules({
+        "ffn": ("data", "model"),
+        "heads": ("data", "model"),
+        "kv_heads": ("data", "model"),
+        "vocab": ("data", "model"),
+    })
+
+
+def dp_only_rules() -> Rules:
+    """Pure data parallelism: every mesh axis acts as batch; weights
+    replicate.  The dry-run's ``--rules dp_only`` baseline for measuring
+    what tensor parallelism buys (see ``launch/dryrun.py``)."""
+    return Rules({"batch": ("pod", "data", "model")})
+
+
+#: Named presets for ``launch/dryrun.py --rules <name>``: zero-arg
+#: callables only.  Deliberately excludes "default" — that is the CLI's
+#: per-shape-kind selection (train/prefill/adaptive ``decode_rules``, which
+#: needs shape context), resolved in ``dryrun._rules_for``, not a preset.
+#: "sp" names the sequence-parallel experiment layout from the hillclimb
+#: A2 iteration (``scripts/hillclimb.py``, results/hc_qwen_sp.json); that
+#: experiment was confirmed and promoted into the default train layout, so
+#: the name resolves to ``train_rules`` — kept so the cited run stays
+#: reproducible.
+RULE_PRESETS = {
+    "train": train_rules,
+    "prefill": prefill_rules,
+    "dp_only": dp_only_rules,
+    "sp": train_rules,
+}

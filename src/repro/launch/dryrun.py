@@ -31,6 +31,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.dist import sharding as shd
 from repro.launch.inputs import batch_axes, input_specs
 from repro.launch.mesh import make_production_mesh, mesh_axis_size
+from repro.launch.results import cell_key
 from repro.models import build
 from repro.models.params import abstract_tree, axes_tree
 from repro.optim.optimizer import (OptimizerConfig, abstract_opt_state,
@@ -48,12 +49,43 @@ def _opt_config(cfg: ModelConfig) -> OptimizerConfig:
 
 def _rules_for(shape: ShapeConfig, mesh, preset: str = "default") -> shd.Rules:
     if preset != "default":
+        if preset not in shd.RULE_PRESETS:
+            raise ValueError(
+                f"unknown rules preset {preset!r}; valid: "
+                f"{sorted(shd.RULE_PRESETS)}")
         return shd.RULE_PRESETS[preset]()
     if shape.kind == "train":
         return shd.train_rules()
     if shape.kind == "prefill":
         return shd.prefill_rules()
     return shd.decode_rules(shape.global_batch, mesh_axis_size(mesh, "data"))
+
+
+def _parse_mesh_shape(mesh_shape: str):
+    """Parse a "data,model" per-pod reshape; single source of the
+    positive-factors and 256-chips/pod invariants for CLI and API."""
+    try:
+        dd, mm = (int(v) for v in mesh_shape.split(","))
+    except ValueError as e:
+        raise ValueError(f"mesh_shape must be 'data,model' ints, "
+                         f"got {mesh_shape!r}") from e
+    if dd <= 0 or mm <= 0 or dd * mm != 256:
+        raise ValueError(f"mesh_shape {mesh_shape!r}: need positive "
+                         f"data,model with data*model == 256 chips/pod")
+    return dd, mm
+
+
+def _batch_dp_axes(mesh, rules: shd.Rules, global_batch: int):
+    """Mesh axes that *actually* shard the global batch under ``rules``.
+
+    partition_spec's divisibility fallback may drop axes the rule asked
+    for, so this — not the rule itself — is what the compiled program
+    does; TrainPlan and the analytic roofline must agree with it.
+    """
+    entry = shd.partition_spec(mesh, rules, (global_batch,), ("batch",))[0]
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
 
 
 #: reduced shapes for --smoke mode (structure-identical, fast compile)
@@ -87,8 +119,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 "status": "skipped", "reason": reason}
 
     if mesh_shape:
-        dd, mm = (int(v) for v in mesh_shape.split(","))
-        assert dd * mm == 256, "per-pod chip count is fixed at 256"
+        dd, mm = _parse_mesh_shape(mesh_shape)
         if multi_pod:
             mesh = jax.make_mesh((2, dd, mm), ("pod", "data", "model"))
         else:
@@ -118,9 +149,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                       "opt": abstract_opt_state(aparams, opt_cfg)}
             saxes = {"params": paxes, "opt": opt_state_axes(paxes)}
             state_sh = shd.tree_shardings(mesh, rules, astate, saxes)
-            plan = TrainPlan.for_shape(cfg, shape,
-                                       mesh_axis_size(mesh, "data") *
-                                       mesh_axis_size(mesh, "pod"))
+            dp_shards = 1
+            for a in _batch_dp_axes(mesh, rules, shape.global_batch):
+                dp_shards *= mesh_axis_size(mesh, a)
+            plan = TrainPlan.for_shape(cfg, shape, dp_shards)
             step = make_train_step(model, opt_cfg, plan)
             jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
                              out_shardings=(state_sh, None),
@@ -178,6 +210,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     }
     # raw XLA numbers (cross-check only: while-loop bodies counted once)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     hlo = compiled.as_text()
@@ -185,17 +219,42 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     record["xla_raw"] = {"flops_per_device": flops, "hbm_bytes_per_device": hbm,
                          "collectives": coll}
 
-    # analytic roofline terms (exact matmul counts; see repro.roofline.model)
+    # analytic roofline terms (exact matmul counts; see repro.roofline.model).
+    # Only layouts the analytic model describes get terms: the per-shape
+    # default, the dp_only fold, and train/sp/prefill presets on their own
+    # shape kind ("sp" == the adopted sequence-parallel train layout).
+    # Mismatched preset/shape combinations record xla_raw only, so the
+    # roofline tables never mix terms from different layouts.
+    analytic_ok = (
+        rules_preset in ("default", "dp_only")
+        or (rules_preset in ("train", "sp") and shape.kind == "train")
+        or (rules_preset == "prefill" and shape.kind == "prefill"))
+    if not analytic_ok:
+        record["status"] = "ok"
+        return record
     from repro.roofline.model import MeshSpec, analytic_cell
+    # MeshSpec geometry comes from the mesh itself: its data/model sizes
+    # drive *parameter*-sharding accounting (FSDP/TP, and the folded
+    # decode layout's 256-way weight sharding), which the batch spec says
+    # nothing about.  Batch-DP shortfall in non-dividing experiment cells
+    # (e.g. --mesh-shape 256,1) is a known analytic approximation; the
+    # compiled truth for the train microbatching is carried by
+    # ``plan.accum_steps`` below.
     dd = mesh_axis_size(mesh, "data")
     mm = mesh_axis_size(mesh, "model")
-    if rules_preset == "dp_only":  # model axis acts as extra data parallelism
-        dd, mm = dd * mm, 1
+    if rules_preset == "dp_only":
+        # weights replicate, so only batch DP matters — count the mesh
+        # axes that actually divide the batch (fallback may drop some)
+        dd = 1
+        for a in _batch_dp_axes(mesh, rules, shape.global_batch):
+            if a != "pod":
+                dd *= mesh_axis_size(mesh, a)
+        mm = 1
     mesh_spec = MeshSpec(pod=2 if multi_pod else 1, data=dd, model=mm)
     accum = 1
     moment_bytes = 4
     if shape.kind == "train":
-        accum = TrainPlan.for_shape(cfg, shape, mesh_spec.dp).accum_steps
+        accum = plan.accum_steps  # the plan the step was compiled with
         moment_bytes = 2 if _opt_config(cfg).moment_dtype == jnp.bfloat16 else 4
     cell = analytic_cell(cfg, shape, mesh_spec, accum=accum,
                          remat=cfg.remat and shape.kind == "train",
@@ -222,10 +281,19 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced configs/shapes (CI; same code paths)")
     ap.add_argument("--rules", default="default",
-                    help="sharding rules preset (default | dp_only)")
+                    choices=["default"] + sorted(shd.RULE_PRESETS),
+                    help="sharding rules preset (a repro.dist.sharding."
+                         "RULE_PRESETS key); 'default' picks per shape "
+                         "kind, incl. adaptive decode_rules for decode")
     ap.add_argument("--mesh-shape", default=None,
                     help="data,model reshape of the 256 chips/pod (e.g. 64,4)")
     args = ap.parse_args()
+
+    if args.mesh_shape:  # fail fast, before any cell writes a record
+        try:
+            _parse_mesh_shape(args.mesh_shape)
+        except ValueError as e:
+            ap.error(f"--mesh-shape: {e}")
 
     overrides: Dict[str, Any] = {}
     for kv in args.set:
@@ -250,14 +318,16 @@ def main():
     if os.path.exists(args.out):
         with open(args.out) as f:
             results = json.load(f)
-    done = {(r["arch"], r["shape"], r["mesh"],
-             json.dumps(r.get("overrides", {}), sort_keys=True))
-            for r in results}
+    # error records don't count as done: a re-run retries them, and the
+    # supersede step below replaces the stale error record on success
+    done = {cell_key(r) for r in results if r.get("status") != "error"}
 
     for arch, shape, multi in cells:
-        key = (arch, shape, "multi" if multi else "single",
-               json.dumps({k: str(v) for k, v in overrides.items()},
-                          sort_keys=True))
+        key = cell_key({
+            "arch": arch, "shape": shape,
+            "mesh": "multi" if multi else "single", "rules": args.rules,
+            "mesh_shape": args.mesh_shape or "",
+            "overrides": {k: str(v) for k, v in overrides.items()}})
         if key in done:
             print(f"[skip-done] {key}")
             continue
@@ -276,10 +346,6 @@ def main():
                                  compile_only=not args.lower_only,
                                  smoke=args.smoke, rules_preset=args.rules,
                                  mesh_shape=args.mesh_shape)
-                if args.rules != "default":
-                    rec["rules"] = args.rules
-                if args.mesh_shape:
-                    rec["mesh_shape"] = args.mesh_shape
             finally:
                 signal.alarm(0)
         except Exception as e:
@@ -287,15 +353,36 @@ def main():
                    "mesh": "multi" if multi else "single",
                    "status": "error", "error": f"{type(e).__name__}: {e}",
                    "traceback": traceback.format_exc()[-2000:]}
+        # stamp on every record (incl. errors) so the resume-dedup key
+        # distinguishes sharding experiments from the canonical sweep;
+        # unstamped legacy records never match a key and simply re-run
+        rec["rules"] = args.rules
+        rec["mesh_shape"] = args.mesh_shape or ""
         if overrides:
             rec.setdefault("overrides",
                            {k: str(v) for k, v in overrides.items()})
+        # supersede: drop any same-key predecessor so resumes never leave
+        # stale duplicates.  Legacy records lacking the 'rules' stamp (the
+        # pre-stamping dry-run only stamped non-default runs) are
+        # superseded by a default-rules re-run with the same mesh_shape —
+        # rules experiments never touch them.
+        ov = json.dumps(rec.get("overrides", {}), sort_keys=True)
+        results = [
+            r for r in results
+            if not ((r["arch"], r["shape"], r["mesh"]) ==
+                    (rec["arch"], rec["shape"], rec["mesh"])
+                    and json.dumps(r.get("overrides", {}),
+                                   sort_keys=True) == ov
+                    and (cell_key(r) == cell_key(rec)
+                         or ("rules" not in r
+                             and r.get("mesh_shape", "") == rec["mesh_shape"]
+                             and rec["rules"] == "default")))]
         results.append(rec)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
         status = rec.get("status")
         extra = ""
-        if status == "ok":
+        if status == "ok" and "roofline" in rec:
             r = rec["roofline"]
             extra = (f" bottleneck={r['bottleneck']}"
                      f" frac={r['roofline_fraction']:.3f}"

@@ -1,0 +1,37 @@
+"""Dry-run results-file record helpers.
+
+Shared by the dry-run's resume logic, ``scripts/make_tables.py``, and the
+sweep-completeness test, so the definition of a record's identity and of
+"canonical vs. experiment" lives in exactly one place.  Deliberately free
+of jax imports: ``launch/dryrun.py`` forces 512 host devices via XLA_FLAGS
+at import time, so consumers that must not touch jax device state (pytest
+in-process, table generation) import *this* module instead.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Tuple
+
+
+def cell_key(rec: Dict[str, Any]) -> Tuple:
+    """Identity of a dry-run record for resume dedup and superseding.
+
+    A cell is (arch, shape, mesh) plus the experiment stamps — rules
+    preset, per-pod mesh reshape, and config overrides.  Unstamped legacy
+    records (written before stamping existed) get ``rules=None`` and so
+    never collide with freshly stamped keys.
+    """
+    return (rec["arch"], rec["shape"], rec["mesh"], rec.get("rules"),
+            rec.get("mesh_shape", ""),
+            json.dumps(rec.get("overrides", {}), sort_keys=True))
+
+
+def is_canonical(rec: Dict[str, Any]) -> bool:
+    """True for canonical-sweep records; False for experiment records.
+
+    Experiment records (``--rules`` / ``--mesh-shape`` runs) are stamped by
+    the dry-run; unstamped legacy records count as canonical, since the
+    pre-stamping dry-run only wrote canonical sweeps unstamped.
+    """
+    return (rec.get("rules", "default") == "default"
+            and not rec.get("mesh_shape"))

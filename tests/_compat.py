@@ -1,0 +1,40 @@
+"""Optional-dependency shims for the test suite.
+
+``hypothesis`` is an optional dev dependency: when present, the property
+tests run as written; when absent (minimal CI images bake only the jax
+toolchain), the ``@given`` tests degrade to explicit skips instead of
+killing collection for the whole module.  Import from here instead of from
+``hypothesis`` directly::
+
+    from _compat import given, settings, st
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade property tests to skips, keep the module
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor or chained call (.filter,
+        .map, ...) by returning itself; values are never drawn."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            def placeholder():
+                pass
+            placeholder.__name__ = f.__name__
+            placeholder.__doc__ = f.__doc__
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(placeholder)
+        return deco

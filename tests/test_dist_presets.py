@@ -1,0 +1,69 @@
+"""Rule presets and the ambient rules context (single-device mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+
+def _mesh():
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def test_presets_registry_complete():
+    for name in ("train", "prefill", "dp_only", "sp"):
+        rules = shd.RULE_PRESETS[name]()
+        assert isinstance(rules, shd.Rules)
+    # sp (hillclimb A2) was promoted into the default train layout
+    assert shd.RULE_PRESETS["sp"] is shd.train_rules
+    # "default" is the dry-run's per-shape-kind selection, not a preset
+    assert "default" not in shd.RULE_PRESETS
+
+
+def test_decode_rules_adaptive():
+    # batch tiles the data axis -> batch-parallel decode
+    full = shd.decode_rules(batch=256, data_size=16)
+    assert full.mesh_axes("batch") == ("pod", "data")
+    assert full.mesh_axes("heads") == ("model",)
+    # batch 1 cannot fill data=16 -> fold data into model parallelism
+    tiny = shd.decode_rules(batch=1, data_size=16)
+    assert tiny.mesh_axes("batch") == ()
+    assert tiny.mesh_axes("heads") == ("data", "model")
+
+
+def test_dp_only_replicates_weights():
+    mesh = _mesh()
+    rules = shd.dp_only_rules()
+    spec = shd.partition_spec(mesh, rules, (64, 64), ("d_model", "ffn"))
+    assert spec == P(None, None)
+
+
+def test_use_rules_nesting_and_restore():
+    mesh = _mesh()
+    assert shd.current_ctx() is None
+    with shd.use_rules(mesh, shd.train_rules()) as outer:
+        assert shd.current_ctx() is outer
+        with shd.use_rules(mesh, shd.prefill_rules()) as inner:
+            assert shd.current_ctx() is inner
+        assert shd.current_ctx() is outer
+    assert shd.current_ctx() is None
+
+
+def test_shard_applies_constraint_in_context():
+    mesh = _mesh()
+    x = jnp.ones((4, 8))
+    with shd.use_rules(mesh, shd.train_rules()):
+        y = jax.jit(lambda v: shd.shard(v, "batch", None) * 2)(x)
+    assert (np.asarray(y) == 2).all()
+
+
+def test_scalar_and_empty_axes():
+    mesh = _mesh()
+    rules = shd.train_rules()
+    assert shd.partition_spec(mesh, rules, (), ()) == P()
+    sh = shd.tree_shardings(
+        mesh, rules,
+        {"step": jax.ShapeDtypeStruct((), jnp.int32)}, {"step": ()})
+    assert sh["step"].spec == P()

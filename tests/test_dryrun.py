@@ -37,8 +37,11 @@ def test_production_sweep_results_complete():
     path = os.path.join(ROOT, "results", "dryrun.json")
     if not os.path.exists(path):
         pytest.skip("full sweep results not present")
+    from repro.launch.results import is_canonical
     recs = json.load(open(path))
-    base = [r for r in recs if "overrides" not in r or not r["overrides"]]
+    # canonical records only: no overrides, default rules, canonical mesh
+    # (experiment records are stamped with their rules/mesh_shape)
+    base = [r for r in recs if not r.get("overrides") and is_canonical(r)]
     errors = [r for r in base if r.get("status") == "error"]
     assert not errors, errors[:2]
     ok = {(r["arch"], r["shape"], r["mesh"]) for r in base
