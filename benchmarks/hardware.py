@@ -40,6 +40,60 @@ def table3_comparison() -> Tuple[List[str], Dict[str, Dict[str, float]]]:
     return rows, comp
 
 
+def engine_validation_table() -> Tuple[List[str], Dict[str, float]]:
+    """repro.sim vs the paper endpoints (must agree to < 0.5%)."""
+    from repro.sim import validate
+    rows = []
+    out = {}
+    for metric, sim, ref, rel in validate():
+        rows.append(f"sim_{metric},{sim:.5g},paper={ref:g}_rel={rel * 100:.3f}%")
+        out[metric] = sim
+    return rows, out
+
+
+def engine_workload_table(fast: bool = False,
+                          shapes: Tuple[str, ...] = ("prefill_32k",
+                                                     "decode_32k"),
+                          ) -> Tuple[List[str], Dict[str, Dict[str, float]]]:
+    """Achieved (not peak) engine efficiency for every model in the zoo.
+
+    Maps each config's matmul inventory onto the 1 MB engine via
+    ``repro.sim.map_model`` (weight matmuls only; attention contractions
+    reported as a separate reprogram-dominated column at 22 nm).
+    """
+    from repro.configs import ARCH_IDS, SHAPES, get_config
+    from repro.sim import EngineConfig, map_model
+    archs = ARCH_IDS[:3] if fast else ARCH_IDS
+    e180 = EngineConfig(technology_nm=180)
+    e22 = EngineConfig(technology_nm=22)
+    rows: List[str] = []
+    out: Dict[str, Dict[str, float]] = {}
+    for arch in archs:
+        cfg = get_config(arch)
+        for sname in shapes:
+            w180 = map_model(cfg, SHAPES[sname], e180)
+            w22 = map_model(cfg, SHAPES[sname], e22)
+            w22_attn = map_model(cfg, SHAPES[sname], e22,
+                                 include_attention=True)
+            bd = w22.energy_breakdown_j
+            reprog_frac = bd["reprogram"] / w22.energy_j if w22.energy_j \
+                else 0.0
+            key = f"{arch}/{sname}"
+            out[key] = {
+                "utilization": w180.utilization,
+                "tops_w_180": w180.achieved_tops_per_watt,
+                "tops_w_22": w22.achieved_tops_per_watt,
+                "tops_w_22_with_attn": w22_attn.achieved_tops_per_watt,
+                "reprogram_energy_frac": reprog_frac,
+            }
+            rows.append(
+                f"engine_{arch}_{sname},util={w180.utilization:.3f},"
+                f"tops_w22={w22.achieved_tops_per_watt:.1f}"
+                f"_withattn={w22_attn.achieved_tops_per_watt:.2f}"
+                f"_reprog={reprog_frac * 100:.1f}%")
+    return rows, out
+
+
 def lm_workload_energy(arch: str = "gemma3_12b") -> Tuple[List[str], Dict[str, float]]:
     """Beyond-paper: project the OISMA 1MB engine's energy for one LM
     decode token vs an equivalent-count bf16 MAC budget on TPU v5e.

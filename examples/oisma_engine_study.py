@@ -1,0 +1,101 @@
+"""OISMA engine study: what the model zoo *achieves* on the 1 MB engine.
+
+Four sections:
+  1. validation — repro.sim vs the paper's published endpoints (< 0.5 %)
+  2. dataflow   — input-stationary (VMM) vs output-stationary schedules:
+                  the Table II 17.6 % multiply-energy gap, derived
+  3. per-config achieved efficiency (prefill + decode) for every arch
+  4. decode-batch sweep — how batching amortizes the RRAM reprogram wall
+
+Run: PYTHONPATH=src python examples/oisma_engine_study.py [--fast]
+"""
+import argparse
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.sim import (EngineConfig, map_matmul, map_model, validate,
+                       vmm_saving_fraction)
+
+
+def section_validation():
+    print("== 1. validation vs paper endpoints ==")
+    print(f"{'metric':<28} {'simulated':>12} {'paper':>10} {'rel err':>8}")
+    for metric, sim, ref, rel in validate():
+        print(f"{metric:<28} {sim:>12.5g} {ref:>10g} {rel * 100:>7.3f}%")
+
+
+def section_dataflow():
+    print("\n== 2. dataflow: derived VMM saving ==")
+    print(f"full-width wordline (32 words): {vmm_saving_fraction() * 100:.2f}%"
+          " multiply-energy saving (paper Table II: 17.6%)")
+    for nw in (32, 16, 8, 1):
+        print(f"  edge tile {nw:>2} words wide: "
+              f"{vmm_saving_fraction(nw) * 100:5.2f}% saving vs single-mult")
+    for df in ("vmm", "single"):
+        eng = EngineConfig(dataflow=df, free_programming=True)
+        r = map_matmul(1024, 2048, 512, eng)
+        print(f"  schedule {df:<7}: {r.energy_per_mac_pj:.4f} pJ/MAC, "
+              f"{r.total_cycles:.3g} cycles")
+
+
+def section_models(fast: bool):
+    print("\n== 3. achieved efficiency per config (1 MB engine) ==")
+    archs = ARCH_IDS[:3] if fast else ARCH_IDS
+    e180 = EngineConfig(technology_nm=180)
+    e22 = EngineConfig(technology_nm=22)
+    print(f"{'arch':<18} {'shape':<12} {'util':>6} {'TOPS/W@180':>11} "
+          f"{'TOPS/W@22':>10} {'+attn@22':>9} {'reprog%':>8} {'tok/s@22':>10}")
+    for arch in archs:
+        cfg = get_config(arch)
+        for sname in ("prefill_32k", "decode_32k"):
+            shape = SHAPES[sname]
+            w180 = map_model(cfg, shape, e180)
+            w22 = map_model(cfg, shape, e22)
+            wa = map_model(cfg, shape, e22, include_attention=True)
+            bd = w22.energy_breakdown_j
+            rp = bd["reprogram"] / w22.energy_j * 100 if w22.energy_j else 0
+            toks = shape.global_batch * (
+                shape.seq_len if shape.kind != "decode" else 1)
+            print(f"{arch:<18} {sname:<12} {w180.utilization:>6.3f} "
+                  f"{w180.achieved_tops_per_watt:>11.3f} "
+                  f"{w22.achieved_tops_per_watt:>10.2f} "
+                  f"{wa.achieved_tops_per_watt:>9.2f} {rp:>7.1f}% "
+                  f"{toks / w22.latency_s:>10.3g}")
+    print("(attn column maps the activation x activation contractions too —"
+          " reprogram-dominated, which is why the paper keeps OISMA"
+          " weight-stationary)")
+
+
+def section_batch_sweep(fast: bool):
+    print("\n== 4. decode batch vs reprogramming (h2o_danube, 22 nm) ==")
+    from repro.configs.base import ShapeConfig
+    cfg = get_config("h2o_danube_1p8b")
+    e22 = EngineConfig(technology_nm=22)
+    batches = (1, 128, 2048) if fast else (1, 16, 128, 1024, 4096, 16384)
+    for b in batches:
+        shape = ShapeConfig(f"decode_b{b}", "decode", 32_768, b)
+        w = map_model(cfg, shape, e22)
+        bd = w.energy_breakdown_j
+        rp = bd["reprogram"] / w.energy_j * 100 if w.energy_j else 0
+        print(f"  batch {b:>5}: TOPS/W={w.achieved_tops_per_watt:7.2f} "
+              f"reprog={rp:5.1f}% energy/tok="
+              f"{w.energy_j / b * 1e3:.3g} mJ")
+    print("(RRAM write energy is device-limited and does not scale with the"
+          " CMOS node, so at 22 nm a weight set larger than the engine makes"
+          " small-batch decode reprogram-dominated; batching amortizes each"
+          " tile rewrite over more tokens and restores the paper's"
+          " efficiency — the peak-vs-achieved gap the closed-form model"
+          " cannot see)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="subset for CI")
+    args = ap.parse_args()
+    section_validation()
+    section_dataflow()
+    section_models(args.fast)
+    section_batch_sweep(args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Benchmark decode_rules' folded ("data", "model") weight layout against
+batch-parallel decode (prefill_rules) on the small-batch long-context cells
+where the fold actually triggers (long_500k, batch 1).
+
+Both layouts are lowered + compiled at full scale by repro.launch.dryrun
+(256 chips, single pod); the comparison reads the compiled artifacts:
+per-device HBM bytes (weight residency/traffic), parsed collective bytes,
+and XLA peak memory.  Experiment records are stamped with their rules
+preset, so they share results/dryrun.json with the canonical sweep without
+polluting it.
+
+Run: PYTHONPATH=src python scripts/bench_decode_layouts.py
+(expects the canonical sweep in results/dryrun.json; compiles the
+prefill-rules variants on first run, ~1 min/cell on CPU)
+"""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT = os.path.join(ROOT, "results", "dryrun.json")
+ARCHS = ("zamba2_2p7b", "xlstm_1p3b", "h2o_danube_1p8b")
+SHAPE = "long_500k"
+
+sys.path.insert(0, os.path.join(ROOT, "src"))
+from repro.roofline import hw  # noqa: E402
+
+
+def _records():
+    with open(OUT) as f:
+        return json.load(f)
+
+
+def _find(recs, arch, rules):
+    for r in recs:
+        if (r["arch"], r["shape"], r["mesh"]) == (arch, SHAPE, "single") \
+                and r.get("rules", "default") == rules \
+                and not r.get("mesh_shape") and not r.get("overrides") \
+                and r.get("status") == "ok":
+            return r
+    return None
+
+
+def _ensure(arch, rules):
+    if _find(_records(), arch, rules):
+        return
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    print(f"[compile] {arch} x {SHAPE} x single --rules {rules}", flush=True)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", SHAPE, "--mesh", "single", "--rules", rules,
+         "--out", OUT], env=env, cwd=ROOT, capture_output=True, text=True)
+    if r.returncode != 0:
+        raise RuntimeError(r.stdout[-1500:] + r.stderr[-1500:])
+
+
+def main():
+    if not os.path.exists(OUT):
+        raise SystemExit("results/dryrun.json missing — run "
+                         "`python -m repro.launch.dryrun --all --mesh both` "
+                         "first")
+    for arch in ARCHS:
+        _ensure(arch, "prefill")
+    recs = _records()
+    print(f"\n{'arch':<18} {'layout':<16} {'HBM/chip':>10} {'coll/chip':>10} "
+          f"{'t_mem':>9} {'t_coll':>9} {'peak MiB':>9}")
+    for arch in ARCHS:
+        folded = _find(recs, arch, "default")
+        batchp = _find(recs, arch, "prefill")
+        if not folded or not batchp:
+            print(f"{arch:<18} (missing records — run the canonical sweep)")
+            continue
+        for label, r in (("folded(d,m)", folded), ("batch-parallel", batchp)):
+            hbm = r["xla_raw"]["hbm_bytes_per_device"]
+            coll = sum(v for k, v in r["xla_raw"]["collectives"].items()
+                       if k != "_count")
+            print(f"{arch:<18} {label:<16} {hbm / 2**20:>8.1f}Mi "
+                  f"{coll / 2**20:>8.1f}Mi {hbm / hw.HBM_BW * 1e3:>7.2f}ms "
+                  f"{coll / hw.ICI_BW_PER_LINK * 1e3:>7.2f}ms "
+                  f"{r['memory']['peak_bytes_per_device'] / 2**20:>9.1f}")
+    print("\nfolded(d,m) = decode_rules' 256-way joint ('data','model') "
+          "weight sharding;\nbatch-parallel = prefill_rules (batch over "
+          "'data', weights 16-way over 'model';\nat batch 1 the data axis "
+          "idles and weights replicate 16x per chip).")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ All formulas count matmul FLOPs as 2mnk; elementwise work is ignored
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.roofline import hw
@@ -102,6 +102,18 @@ def _slstm_flops_per_tok(cfg: ModelConfig) -> float:
     return 2 * d * 4 * d + 2 * 4 * h * hd * hd + 2 * d * d
 
 
+def _layer_eff_kv(cfg: ModelConfig, layer_idx: int, kv_len: float) -> float:
+    """Effective attended kv length of one layer under SWA/local-global."""
+    if cfg.local_global_pattern:
+        per = cfg.local_global_pattern + 1
+        if (layer_idx % per) == per - 1:
+            return kv_len
+        return min(kv_len, cfg.window_size or kv_len)
+    if cfg.window_size:
+        return min(kv_len, cfg.window_size)
+    return kv_len
+
+
 def fwd_flops_per_layer_tok(cfg: ModelConfig, layer_idx: int,
                             kv_len: float) -> float:
     if cfg.family == "xlstm":
@@ -112,15 +124,7 @@ def fwd_flops_per_layer_tok(cfg: ModelConfig, layer_idx: int,
     if cfg.family == "hybrid":
         return _mamba_flops_per_tok(cfg)  # shared attn handled separately
     # decoder/encdec transformer layer
-    if cfg.local_global_pattern:
-        per = cfg.local_global_pattern + 1
-        is_global = (layer_idx % per) == per - 1
-        eff = kv_len if is_global else min(kv_len, cfg.window_size or kv_len)
-    elif cfg.window_size:
-        eff = min(kv_len, cfg.window_size)
-    else:
-        eff = kv_len
-    a = _attn_flops_per_tok(cfg, eff)
+    a = _attn_flops_per_tok(cfg, _layer_eff_kv(cfg, layer_idx, kv_len))
     if cfg.num_experts and layer_idx >= cfg.first_dense_layers:
         return a + _moe_flops_per_tok(cfg)
     return a + _mlp_flops_per_tok(cfg)
@@ -168,14 +172,7 @@ def _attn_quad_flops_per_tok(cfg: ModelConfig, kv_len: float) -> float:
     for i in range(cfg.num_layers):
         if cfg.family in ("xlstm", "hybrid"):
             continue
-        if cfg.local_global_pattern:
-            per = cfg.local_global_pattern + 1
-            eff = kv_len if (i % per) == per - 1 else min(
-                kv_len, cfg.window_size or kv_len)
-        elif cfg.window_size:
-            eff = min(kv_len, cfg.window_size)
-        else:
-            eff = kv_len
+        eff = _layer_eff_kv(cfg, i, kv_len)
         if cfg.attention_type == "mla":
             qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
             total += 2 * cfg.num_heads * (qk + cfg.v_head_dim) * eff
@@ -278,6 +275,195 @@ def kv_cache_bytes(cfg: ModelConfig, batch: int, length: int) -> float:
         state += (cfg.num_layers * batch * cfg.encoder_frames * 2 *
                   cfg.num_kv_heads * cfg.head_dim * 2.0)
     return state + per_tok * batch * length
+
+
+# ---------------------------------------------------------------------------
+# explicit matmul inventory (shapes, not just FLOP totals)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MatmulShape:
+    """One (m, k) @ (k, n) matmul instance class in a model's workload.
+
+    ``stationary`` marks matmuls whose (k, n) operand is a fixed parameter
+    (projections, MLP, experts, recurrent weights) — the class an IMC
+    engine can hold resident; score/value contractions and SSD/mLSTM cell
+    products multiply two activations and are tagged ``stationary=False``.
+    ``m`` may be fractional (per-expert average of routed tokens).
+    """
+    name: str
+    m: float
+    k: int
+    n: int
+    count: float = 1.0
+    stationary: bool = True
+
+    @property
+    def macs(self) -> float:
+        return self.m * self.k * self.n * self.count
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.macs
+
+
+class _Inv:
+    """Accumulates MatmulShape entries, merging identical classes."""
+
+    def __init__(self):
+        self._d: Dict[Tuple, List[float]] = {}
+
+    def add(self, name, m, k, n, count=1.0, stationary=True):
+        if m <= 0 or k <= 0 or n <= 0 or count <= 0:
+            return
+        key = (name, float(m), int(k), int(n), bool(stationary))
+        self._d.setdefault(key, [0.0])[0] += count
+
+    def entries(self) -> List[MatmulShape]:
+        return [MatmulShape(name=k[0], m=k[1], k=k[2], n=k[3], count=c[0],
+                            stationary=k[4])
+                for k, c in sorted(self._d.items())]
+
+
+def _attn_inventory(inv: _Inv, cfg: ModelConfig, t: float, kv_len: float,
+                    prefix: str = "attn"):
+    """Mirror of _attn_flops_per_tok as explicit shapes (one layer)."""
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kv = max(1, round(kv_len))
+    if cfg.attention_type == "mla":
+        qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        inv.add(f"{prefix}.q_down", t, d, cfg.q_lora_rank or d)
+        if cfg.q_lora_rank:
+            inv.add(f"{prefix}.q_up", t, cfg.q_lora_rank, h * qk)
+        inv.add(f"{prefix}.kv_down", t, d,
+                cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+        inv.add(f"{prefix}.kv_up", t, cfg.kv_lora_rank,
+                h * (cfg.qk_nope_head_dim + cfg.v_head_dim))
+        inv.add(f"{prefix}.out", t, h * cfg.v_head_dim, d)
+        inv.add(f"{prefix}.scores", t, qk, kv, count=h, stationary=False)
+        inv.add(f"{prefix}.values", t, kv, cfg.v_head_dim, count=h,
+                stationary=False)
+        return
+    inv.add(f"{prefix}.q", t, d, h * hd)
+    inv.add(f"{prefix}.kv", t, d, 2 * kh * hd)
+    inv.add(f"{prefix}.out", t, h * hd, d)
+    inv.add(f"{prefix}.scores", t, hd, kv, count=h, stationary=False)
+    inv.add(f"{prefix}.values", t, kv, hd, count=h, stationary=False)
+
+
+def _mlp_inventory(inv: _Inv, cfg: ModelConfig, t: float, prefix="mlp"):
+    if cfg.mlp_gated:
+        inv.add(f"{prefix}.gate", t, cfg.d_model, cfg.d_ff)
+    inv.add(f"{prefix}.up", t, cfg.d_model, cfg.d_ff)
+    inv.add(f"{prefix}.down", t, cfg.d_ff, cfg.d_model)
+
+
+def _moe_inventory(inv: _Inv, cfg: ModelConfig, t: float):
+    act = cfg.num_experts_per_tok + cfg.num_shared_experts
+    inv.add("moe.router", t, cfg.d_model, cfg.num_experts)
+    m_e = t * act / cfg.num_experts  # routed tokens per expert matrix
+    inv.add("moe.expert_gate", m_e, cfg.d_model, cfg.moe_d_ff,
+            count=cfg.num_experts)
+    inv.add("moe.expert_up", m_e, cfg.d_model, cfg.moe_d_ff,
+            count=cfg.num_experts)
+    inv.add("moe.expert_down", m_e, cfg.moe_d_ff, cfg.d_model,
+            count=cfg.num_experts)
+
+
+def _mamba_inventory(inv: _Inv, cfg: ModelConfig, t: float, chunk=256):
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    inv.add("mamba.in_proj", t, cfg.d_model,
+            2 * di + 2 * n + di // cfg.ssm_headdim)
+    inv.add("mamba.ssd_bc", t, di, n, count=2, stationary=False)
+    inv.add("mamba.ssd_intra", t, chunk, di, stationary=False)
+    inv.add("mamba.out_proj", t, di, cfg.d_model)
+
+
+def _mlstm_inventory(inv: _Inv, cfg: ModelConfig, t: float, chunk=256):
+    from repro.models.ssm import mlstm_inner
+    di = mlstm_inner(cfg)
+    dk = di // cfg.num_heads
+    inv.add("mlstm.up", t, cfg.d_model, 2 * di)
+    inv.add("mlstm.qkv", t, di, 3 * dk)
+    inv.add("mlstm.intra", t, chunk, 2 * dk, count=cfg.num_heads,
+            stationary=False)
+    inv.add("mlstm.state", t, dk, 2 * dk, count=cfg.num_heads,
+            stationary=False)
+    inv.add("mlstm.down", t, di, cfg.d_model)
+
+
+def _slstm_inventory(inv: _Inv, cfg: ModelConfig, t: float):
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    inv.add("slstm.gates", t, d, 4 * d)
+    inv.add("slstm.recurrent", t, hd, 4 * hd, count=h)
+    inv.add("slstm.out", t, d, d)
+
+
+def matmul_inventory(cfg: ModelConfig, shape: ShapeConfig) -> List[MatmulShape]:
+    """Every matmul in one step of this cell, as explicit (m, k, n) shapes.
+
+    Structural mirror of ``fwd_flops_per_token`` + ``_encoder_flops`` +
+    ``_cross_attn_flops``: the summed ``.flops`` of the inventory equals the
+    closed-form forward FLOP count (pinned by tests/test_sim.py), but keeps
+    the shape/count/stationarity structure a hardware mapper needs.
+    Train shapes report the forward pass only (the backward runs native
+    bf16 on the baseline accelerator, not on the IMC engine).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    prefix = cfg.num_prefix_tokens
+    kv = s + prefix
+    if shape.kind == "decode":
+        t = float(b)
+        eff_base = float(kv)
+    else:
+        t = float(b) * (s + prefix)
+        eff_base = (kv + 1) / 2
+    inv = _Inv()
+    for i in range(cfg.num_layers):
+        if cfg.family == "xlstm":
+            per = cfg.slstm_every
+            if (i % per) == per - 1:
+                _slstm_inventory(inv, cfg, t)
+            else:
+                _mlstm_inventory(inv, cfg, t)
+            continue
+        if cfg.family == "hybrid":
+            _mamba_inventory(inv, cfg, t)
+            continue
+        eff = _layer_eff_kv(cfg, i, eff_base)
+        _attn_inventory(inv, cfg, t, eff)
+        if cfg.num_experts and i >= cfg.first_dense_layers:
+            _moe_inventory(inv, cfg, t)
+        else:
+            _mlp_inventory(inv, cfg, t)
+    if cfg.family == "hybrid":
+        n_attn = cfg.num_layers // cfg.attn_every
+        for _ in range(n_attn):
+            _attn_inventory(inv, cfg, t, eff_base, prefix="shared_attn")
+            _mlp_inventory(inv, cfg, t, prefix="shared_mlp")
+        inv.add("shared_lora.down", t, cfg.d_model, cfg.lora_rank,
+                count=n_attn)
+        inv.add("shared_lora.up", t, cfg.lora_rank, cfg.d_model,
+                count=n_attn)
+    if cfg.family == "encdec":
+        t_enc = float(b) * cfg.encoder_frames
+        for _ in range(cfg.encoder_layers):
+            _attn_inventory(inv, cfg, t_enc, cfg.encoder_frames,
+                            prefix="enc_attn")
+            _mlp_inventory(inv, cfg, t_enc, prefix="enc_mlp")
+        d, h, hd, f = cfg.d_model, cfg.num_heads, cfg.head_dim, \
+            cfg.encoder_frames
+        t_x = t if shape.kind != "decode" else float(b)
+        inv.add("cross_attn.q", t_x, d, h * hd, count=cfg.num_layers)
+        inv.add("cross_attn.out", t_x, h * hd, d, count=cfg.num_layers)
+        inv.add("cross_attn.scores", t_x, hd, f, count=cfg.num_layers * h,
+                stationary=False)
+        inv.add("cross_attn.values", t_x, f, hd, count=cfg.num_layers * h,
+                stationary=False)
+    inv.add("logits", t, cfg.d_model, cfg.vocab_size)
+    return inv.entries()
 
 
 #: Activation-traffic coefficient: bytes moved per token per layer per

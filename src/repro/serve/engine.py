@@ -1,15 +1,32 @@
 """Batched serving engine: continuous batching over fixed decode slots.
 
 A request enters a free slot, is prefilled into that slot's region of the
-batched KV cache, and decodes in lock-step with all other slots; finished
-slots (EOS or max_tokens) are refilled from the queue.  This is the
-standard slot-based continuous batching used by production LM servers,
-reduced to a single-process reference.
+batched KV cache, and decodes in lock-step with all other slots; a
+finished slot (EOS or max_tokens) is refilled from the queue immediately —
+the other slots keep decoding, no wave barrier.  This is the standard
+slot-based continuous batching used by production LM servers, reduced to a
+single-process reference.
+
+Slot refill works with the models' scalar decode position: prompts are
+left-padded, so every live slot shares one cache write position.  A
+refilled request is prefilled alone, left-padded to exactly the current
+position, and its batch-1 cache row is scattered into its slot (the
+models' ``cache_axes`` name the batch axis of every cache leaf, so the
+scatter is family-agnostic).  A prompt longer than the current position
+is deferred — never refilled mid-stream — so live slots' positions are
+unaffected by arrivals; it is served when the position has advanced past
+its length, or by the next generation (fresh cache) once this one
+drains or exhausts the cache region.
+
+Reference-implementation caveat: each refill prefills at a new (1, pos)
+token shape, which retraces/compiles under jit — fine for the tiny test
+models; a production engine would prefill at bucketed lengths into a
+paged cache instead.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,56 +58,122 @@ class ServeEngine:
     def __init__(self, model, params, cfg: ModelConfig, ecfg: EngineConfig):
         self.model, self.params, self.cfg, self.ecfg = model, params, cfg, ecfg
         self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill, static_argnums=2)
+
+    # ------------------------------------------------------------------
+    # batch construction / cache surgery
+    # ------------------------------------------------------------------
+
+    def _make_batch(self, prompts: List[np.ndarray], plen: int) -> Dict:
+        b = len(prompts)
+        toks = np.ones((b, plen), np.int32)  # pad with EOS/pad id 1
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p      # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.num_prefix_tokens:
+            batch["patches"] = jnp.zeros(
+                (b, self.cfg.num_prefix_tokens, self.cfg.d_model),
+                jnp.bfloat16)
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (b, self.cfg.encoder_frames, self.cfg.d_model),
+                jnp.bfloat16)
+        return batch
+
+    def _scatter_slot(self, cache, single, slot: int):
+        """Write a batch-1 cache into row ``slot`` of the batched cache."""
+        axes = self.model.cache_axes(1, 1)
+        leaves, treedef = jax.tree.flatten(cache)
+        single_leaves = jax.tree.leaves(single)
+        axis_leaves = jax.tree.leaves(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+        out = []
+        for leaf, one, ax in zip(leaves, single_leaves, axis_leaves):
+            bi = ax.index("batch")
+            row = jnp.take(one, 0, axis=bi)
+            out.append(leaf.at[(slice(None),) * bi + (slot,)].set(row))
+        return jax.tree.unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
 
     def run(self, requests: List[Request], seed: int = 0) -> Dict[int, List[int]]:
-        """Simplified lock-step scheduler: serve in waves of ``slots``."""
-        ecfg = self.ecfg
+        """Continuous batching: slots refill from the queue as they finish."""
         rng = np.random.default_rng(seed)
+        for r in requests:
+            # the cache holds max_len positions and decoding needs >= 1
+            if len(r.prompt) > self.ecfg.max_len - 1:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)} "
+                    f"exceeds cache capacity (max_len={self.ecfg.max_len})")
         queue = list(requests)
         results: Dict[int, List[int]] = {}
         while queue:
-            wave = [queue.pop(0) for _ in range(min(ecfg.slots, len(queue)))]
-            b = len(wave)
-            plen = max(len(r.prompt) for r in wave)
-            toks = np.ones((b, plen), np.int32)  # pad with EOS/pad id 1
-            for i, r in enumerate(wave):
-                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
-            batch = {"tokens": jnp.asarray(toks)}
-            if self.cfg.num_prefix_tokens:
-                batch["patches"] = jnp.zeros(
-                    (b, self.cfg.num_prefix_tokens, self.cfg.d_model),
-                    jnp.bfloat16)
-            if self.cfg.family == "encdec":
-                batch["frames"] = jnp.zeros(
-                    (b, self.cfg.encoder_frames, self.cfg.d_model),
-                    jnp.bfloat16)
-            logits, cache = jax.jit(
-                self.model.prefill, static_argnums=2)(
-                    self.params, batch, ecfg.max_len)
-            pos = plen + self.cfg.num_prefix_tokens
-            live = np.ones((b,), bool)
-            steps = max(r.max_new_tokens for r in wave)
-            cur = self._sample(logits, rng)
-            for i, r in enumerate(wave):
-                r.out_tokens.append(int(cur[i]))
-            for _ in range(steps - 1):
-                logits, cache = self._decode(self.params,
-                                             jnp.asarray(cur)[:, None],
-                                             cache, jnp.int32(pos))
-                pos += 1
-                cur = self._sample(logits, rng)
-                for i, r in enumerate(wave):
-                    if live[i]:
-                        tok = int(cur[i])
-                        r.out_tokens.append(tok)
-                        if tok == ecfg.eos_id or len(r.out_tokens) >= r.max_new_tokens:
-                            live[i] = False
-                if not live.any():
-                    break
-            for r in wave:
-                r.done = True
-                results[r.rid] = r.out_tokens
+            self._run_generation(queue, results, rng)
         return results
+
+    def _run_generation(self, queue: List[Request],
+                        results: Dict[int, List[int]],
+                        rng: np.random.Generator) -> None:
+        ecfg, cfg = self.ecfg, self.cfg
+        prefix = cfg.num_prefix_tokens
+        slots_n = min(ecfg.slots, len(queue))
+        wave = [queue.pop(0) for _ in range(slots_n)]
+        plen = max(len(r.prompt) for r in wave)
+        batch = self._make_batch([r.prompt for r in wave], plen)
+        logits, cache = self._prefill(self.params, batch, ecfg.max_len)
+        pos = plen + prefix
+        slots: List[Optional[Request]] = list(wave)
+        cur = self._sample(logits, rng)
+        for i, r in enumerate(slots):
+            self._accept(r, int(cur[i]))
+
+        while True:
+            # retire finished requests; refill their slots from the queue
+            cur = np.array(cur, np.int32)  # writable copy for refills
+            for i, r in enumerate(slots):
+                if r is not None and r.done:
+                    results[r.rid] = r.out_tokens
+                    slots[i] = None
+            for i in range(slots_n):
+                if slots[i] is not None or not queue:
+                    continue
+                nxt = queue[0]
+                pad = pos - prefix
+                if len(nxt.prompt) > pad or pad + 1 > ecfg.max_len:
+                    # prompt doesn't fit the already-filled region, or no
+                    # cache room: defer (a later step or the next
+                    # generation's fresh cache takes it, FIFO preserved)
+                    break
+                queue.pop(0)
+                slots[i] = nxt
+                sbatch = self._make_batch([nxt.prompt], pad)
+                slogits, scache = self._prefill(self.params, sbatch,
+                                                ecfg.max_len)
+                cache = self._scatter_slot(cache, scache, i)
+                tok = self._sample(slogits, rng)
+                self._accept(nxt, int(tok[0]))
+                cur[i] = tok[0]
+            if all(r is None for r in slots) or pos >= ecfg.max_len + prefix:
+                for r in slots:  # out of room: flush whatever is live
+                    if r is not None:
+                        r.done = True
+                        results[r.rid] = r.out_tokens
+                return
+            logits, cache = self._decode(self.params,
+                                         jnp.asarray(cur)[:, None],
+                                         cache, jnp.int32(pos))
+            pos += 1
+            cur = self._sample(logits, rng)
+            for i, r in enumerate(slots):
+                if r is not None:
+                    self._accept(r, int(cur[i]))
+
+    def _accept(self, r: Request, tok: int) -> None:
+        r.out_tokens.append(tok)
+        if tok == self.ecfg.eos_id or len(r.out_tokens) >= r.max_new_tokens:
+            r.done = True
 
     def _sample(self, logits, rng) -> np.ndarray:
         if self.ecfg.temperature <= 0:

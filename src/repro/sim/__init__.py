@@ -1,0 +1,33 @@
+"""repro.sim — tile-level OISMA engine simulator + workload mapper.
+
+Where ``repro.core.oisma_cost`` is a closed-form peak model, this package
+answers what a *real* MatMul workload achieves on a concrete engine:
+
+  array.py     one 4 kB array's timing/energy (Table II decomposition,
+               RRAM reprogramming costs, 180 nm / 22 nm scaling)
+  dataflow.py  input-stationary (VMM) vs output-stationary (single-mult)
+               schedules; the 17.6 % VMM saving derived from toggle counts
+  mapper.py    weight-stationary tiling of (M, K, N) matmuls — and whole
+               models via roofline.model.matmul_inventory — onto an
+               EngineConfig, with utilization, stalls, and the
+               read/mult/accum/reprogram energy budget
+  trace.py     per-tile-class event records + summarize() for the tables
+
+``validate()`` pins the simulator to the paper's published endpoints
+(E_MAC, 819.2 GOPS, 0.789/0.891 TOPS/W, 3.98 GOPS/mm², 89.5 TOPS/W,
+3.28 TOPS/mm²) to < 0.5 %.  See docs/oisma_engine.md.
+"""
+from repro.sim.array import ArrayModel, TileCost
+from repro.sim.dataflow import DATAFLOWS, Dataflow, get_dataflow, \
+    vmm_saving_fraction
+from repro.sim.mapper import (EngineConfig, MatmulReport, WorkloadReport,
+                              ideal_workload, map_matmul, map_model,
+                              map_workload, validate)
+from repro.sim.trace import TileEvent, Trace
+
+__all__ = [
+    "ArrayModel", "TileCost", "DATAFLOWS", "Dataflow", "get_dataflow",
+    "vmm_saving_fraction", "EngineConfig", "MatmulReport", "WorkloadReport",
+    "ideal_workload", "map_matmul", "map_model", "map_workload", "validate",
+    "TileEvent", "Trace",
+]

@@ -42,3 +42,51 @@ def test_engine_prompt_sensitivity(engine):
     r2 = engine.run([Request(rid=0, prompt=np.array([40, 41, 42]),
                              max_new_tokens=4)])
     assert r1[0] != r2[0] or True  # different prompts usually diverge
+
+
+def test_engine_slot_refill_no_wave_barrier(engine):
+    """A finished slot refills without waiting for the whole wave.
+
+    slots=2 with one long and two short requests: a wave scheduler needs a
+    second generation for the third request (>= 12 decode steps); slot
+    refill serves it inside the long request's stream (<= 11)."""
+    calls = {"n": 0}
+    orig = engine._decode
+
+    def counting(*a):
+        calls["n"] += 1
+        return orig(*a)
+
+    engine._decode = counting
+    try:
+        reqs = [Request(rid=0, prompt=np.array([3, 4, 5]), max_new_tokens=2),
+                Request(rid=1, prompt=np.array([6, 7, 8]), max_new_tokens=12),
+                Request(rid=2, prompt=np.array([9, 10, 11]), max_new_tokens=2)]
+        results = engine.run(reqs)
+    finally:
+        engine._decode = orig
+    assert set(results) == {0, 1, 2}
+    for rid, toks in results.items():
+        assert 1 <= len(toks) <= reqs[rid].max_new_tokens
+    assert calls["n"] <= 11
+
+
+def test_engine_rejects_oversized_prompt(engine):
+    with pytest.raises(ValueError, match="exceeds cache capacity"):
+        engine.run([Request(rid=0, prompt=np.arange(100) % 50 + 3,
+                            max_new_tokens=2)])
+
+
+def test_engine_refill_other_families():
+    """The cache scatter is family-agnostic (SSM states, not just KV)."""
+    cfg = get_config("zamba2_2p7b", smoke=True)
+    model = build(cfg)
+    params = init_tree(model.schema(), jax.random.key(1))
+    eng = ServeEngine(model, params, cfg,
+                      EngineConfig(slots=2, max_len=64, temperature=0.0))
+    reqs = [Request(rid=i, prompt=np.arange(2 + i) % 50 + 3,
+                    max_new_tokens=3) for i in range(4)]
+    results = eng.run(reqs)
+    assert set(results) == {0, 1, 2, 3}
+    for toks in results.values():
+        assert 1 <= len(toks) <= 3

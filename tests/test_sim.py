@@ -1,0 +1,299 @@
+"""repro.sim: engine simulator validation + mapper accounting semantics.
+
+The closed-form tile-class accounting in ``map_matmul`` is pinned against
+a brute-force per-tile enumeration (hypothesis property when available),
+the paper endpoints must reproduce to < 0.5%, and the matmul inventory
+must mirror the roofline FLOP formulas exactly.
+"""
+import math
+
+import pytest
+from _compat import given, settings, st
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.core import oisma_cost as oc
+from repro.roofline.model import (_cross_attn_flops, _encoder_flops,
+                                  fwd_flops_per_token, matmul_inventory)
+from repro.sim import (EngineConfig, Trace, get_dataflow, map_matmul,
+                       map_model, map_workload, validate,
+                       vmm_saving_fraction)
+from repro.sim import array as sim_array
+
+
+# ---------------------------------------------------------------------------
+# paper-endpoint validation (acceptance bar: < 0.5% on every metric)
+# ---------------------------------------------------------------------------
+
+def test_validate_endpoints_under_half_percent():
+    rows = validate()
+    assert {r[0] for r in rows} >= {
+        "e_mac_pj", "peak_gops_1mb_180nm", "tops_per_watt_180nm_array",
+        "tops_per_watt_180nm_macro", "gops_per_mm2_180nm",
+        "tops_per_watt_22nm", "tops_per_mm2_22nm"}
+    for metric, sim, ref, rel in rows:
+        assert rel < 0.005, (metric, sim, ref, rel)
+
+
+def test_vmm_saving_is_derived_not_hardcoded():
+    # full wordline reproduces Table II's 17.6%; narrower tiles lose part
+    # of the broadcast amortization
+    assert vmm_saving_fraction(32) == pytest.approx(
+        1 - oc.E_MULT_VMM_FJ_PER_BIT / oc.E_MULT_SINGLE_FJ_PER_BIT,
+        rel=1e-3)
+    assert vmm_saving_fraction(1) == pytest.approx(0.0, abs=1e-12)
+    assert vmm_saving_fraction(8) < vmm_saving_fraction(32)
+
+
+def test_energy_decomposition_reproduces_table2():
+    # static + 1 load  == single-mult mode; static + load/32 == VMM mode
+    s, l = sim_array.E_MULT_STATIC_FJ_PER_BIT, sim_array.E_INPUT_LOAD_FJ_PER_BIT
+    assert s + l == pytest.approx(oc.E_MULT_SINGLE_FJ_PER_BIT)
+    assert s + l / 32 == pytest.approx(oc.E_MULT_VMM_FJ_PER_BIT)
+
+
+# ---------------------------------------------------------------------------
+# brute-force reference for the closed-form tile/round accounting
+# ---------------------------------------------------------------------------
+
+def _brute_force(m, k, n, engine: EngineConfig, stationary=True):
+    df = get_dataflow(engine.dataflow)
+    am = engine.array_model
+    A = engine.arrays
+    tiles = []
+    for k0 in range(0, k, 128):
+        for n0 in range(0, n, 32):
+            tiles.append((min(128, k - k0), min(32, n - n0)))
+    tiles.sort(key=lambda t: (df.mult_cycles(m, t[0], t[1]), t[0], t[1]),
+               reverse=True)
+    compute = reprogram = program = 0.0
+    e = {"read": 0.0, "mult": 0.0, "accum": 0.0, "reprogram": 0.0,
+         "program": 0.0}
+    for r0 in range(0, len(tiles), A):
+        rnd = tiles[r0:r0 + A]
+        compute += max(df.mult_cycles(m, kt, nw) for kt, nw in rnd)
+        if not engine.free_programming:
+            stall = am.program_tile(max(kt for kt, _ in rnd), 1).cycles
+            if r0 == 0 and stationary:
+                program += stall
+            else:
+                reprogram += stall
+    for idx, (kt, nw) in enumerate(tiles):
+        c = am.compute_tile(df.macs(m, kt, nw), df.input_loads(m, kt, nw),
+                            df.mult_cycles(m, kt, nw))
+        e["read"] += c.e_read_j
+        e["mult"] += c.e_mult_j
+        e["accum"] += c.e_accum_j
+        if engine.free_programming:
+            continue
+        w = am.program_tile(kt, nw).e_reprogram_j
+        if not stationary or idx >= A:
+            e["reprogram"] += w
+        else:
+            e["program"] += w
+    return {"tiles": len(tiles), "compute_cycles": compute,
+            "reprogram_cycles": reprogram, "program_cycles": program,
+            "energy": e}
+
+
+def _check_against_brute_force(m, k, n, engine, stationary):
+    ref = _brute_force(m, k, n, engine, stationary)
+    rep = map_matmul(m, k, n, engine, stationary=stationary)
+    assert rep.tiles == ref["tiles"]
+    assert rep.compute_cycles == pytest.approx(ref["compute_cycles"])
+    assert rep.reprogram_cycles == pytest.approx(ref["reprogram_cycles"])
+    assert rep.cost.macs == pytest.approx(m * k * n)
+    assert rep.cost.e_read_j == pytest.approx(ref["energy"]["read"])
+    assert rep.cost.e_mult_j == pytest.approx(ref["energy"]["mult"])
+    assert rep.cost.e_accum_j == pytest.approx(ref["energy"]["accum"])
+    assert rep.cost.e_reprogram_j == pytest.approx(
+        ref["energy"]["reprogram"])
+    assert rep.program_cost.e_reprogram_j == pytest.approx(
+        ref["energy"]["program"])
+    # analytic lower bound + utilization sanity
+    lower = math.ceil(m * k * n / (32 * engine.arrays))
+    assert rep.compute_cycles >= lower - 1e-9
+    assert 0.0 < rep.utilization <= 1.0 + 1e-12
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (7, 128, 32), (16, 129, 33), (4, 1000, 100), (64, 257, 95)])
+@pytest.mark.parametrize("dataflow", ["vmm", "single"])
+@pytest.mark.parametrize("stationary", [True, False])
+def test_mapper_matches_brute_force(m, k, n, dataflow, stationary):
+    engine = EngineConfig(banks=2, arrays_per_bank=2, dataflow=dataflow)
+    _check_against_brute_force(m, k, n, engine, stationary)
+
+
+@given(m=st.integers(1, 48), k=st.integers(1, 500), n=st.integers(1, 120),
+       banks=st.integers(1, 3), dataflow=st.sampled_from(["vmm", "single"]),
+       stationary=st.booleans(), free=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_mapper_brute_force_property(m, k, n, banks, dataflow, stationary,
+                                     free):
+    engine = EngineConfig(banks=banks, arrays_per_bank=2, dataflow=dataflow,
+                          free_programming=free)
+    _check_against_brute_force(m, k, n, engine, stationary)
+
+
+@given(m=st.integers(1, 48), k=st.integers(1, 500), n=st.integers(1, 120),
+       dm=st.integers(0, 16), dk=st.integers(0, 160), dn=st.integers(0, 40))
+@settings(max_examples=60, deadline=None)
+def test_mapper_cycles_monotone_and_lower_bounded(m, k, n, dm, dk, dn):
+    """Cycles are monotone in each of M, K, N and never beat the analytic
+    lower bound ceil(MKN / (macs_per_cycle x arrays))."""
+    engine = EngineConfig(banks=2, arrays_per_bank=2,
+                          free_programming=True)
+    base = map_matmul(m, k, n, engine).total_cycles
+    assert map_matmul(m + dm, k, n, engine).total_cycles >= base
+    assert map_matmul(m, k + dk, n, engine).total_cycles >= base
+    assert map_matmul(m, k, n + dn, engine).total_cycles >= base
+    grown = map_matmul(m + dm, k + dk, n + dn, engine)
+    assert grown.total_cycles >= base
+    lower = math.ceil((m + dm) * (k + dk) * (n + dn) / (32 * engine.arrays))
+    assert grown.total_cycles >= lower - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# dataflow / reprogramming semantics
+# ---------------------------------------------------------------------------
+
+def test_dataflow_energy_and_cycle_ordering():
+    vmm = EngineConfig(dataflow="vmm", free_programming=True)
+    single = EngineConfig(dataflow="single", free_programming=True)
+    rv = map_matmul(128, 2048, 512, vmm)
+    rs = map_matmul(128, 2048, 512, single)
+    assert rv.energy_per_mac_pj == pytest.approx(oc.E_MAC_PJ, rel=1e-6)
+    assert rs.energy_per_mac_pj == pytest.approx(
+        (oc.E_MULT_SINGLE_FJ_PER_BIT + oc.E_ACCUM_FJ_PER_BIT) * 8 / 1000,
+        rel=1e-6)
+    assert rs.compute_cycles == pytest.approx(32 * rv.compute_cycles)
+
+
+def test_reprogramming_accounting():
+    eng = EngineConfig(banks=1, arrays_per_bank=1)  # 1 array: tiny engine
+    # fits: one tile, stationary -> no reprogram, initial program reported
+    r = map_matmul(8, 128, 32, eng)
+    assert r.cost.e_reprogram_j == 0.0
+    assert r.reprogram_cycles == 0.0
+    assert r.program_cost.e_reprogram_j > 0.0
+    # doesn't fit: second tile must be programmed mid-run
+    r2 = map_matmul(8, 256, 32, eng)
+    assert r2.cost.e_reprogram_j > 0.0
+    assert r2.reprogram_cycles > 0.0
+    # non-stationary: every tile write is charged
+    r3 = map_matmul(8, 128, 32, eng, stationary=False)
+    assert r3.cost.e_reprogram_j > 0.0
+    # free_programming (validation mode) zeroes everything
+    r4 = map_matmul(8, 256, 32,
+                    EngineConfig(banks=1, arrays_per_bank=1,
+                                 free_programming=True))
+    assert r4.cost.e_reprogram_j == 0.0 and r4.reprogram_cycles == 0.0
+    # counting the initial residency pulls program cost into the totals
+    r5 = map_matmul(8, 128, 32,
+                    EngineConfig(banks=1, arrays_per_bank=1,
+                                 count_initial_programming=True))
+    assert r5.cost.e_reprogram_j > 0.0
+
+
+def test_reprogramming_counts_distinct_instances():
+    """count > 1 means distinct weight matrices (merged layer/expert
+    classes): residency is shared across the whole stream, so instances
+    beyond the engine's capacity are rewrites, not free preloads."""
+    eng = EngineConfig(banks=1, arrays_per_bank=1)
+    one = map_matmul(8, 128, 32, eng)
+    two = map_matmul(8, 128, 32, eng, count=2)
+    # the second matrix must be programmed mid-run on a 1-array engine
+    assert two.cost.e_reprogram_j == pytest.approx(
+        one.program_cost.e_reprogram_j)
+    assert two.reprogram_cycles > 0.0
+    # write conservation: initial + rewrites == count x all tiles
+    assert two.cost.e_reprogram_j + two.program_cost.e_reprogram_j == \
+        pytest.approx(2 * one.program_cost.e_reprogram_j)
+    # a 2-array engine holds both instances resident: no rewrites
+    both = map_matmul(8, 128, 32, EngineConfig(banks=2, arrays_per_bank=1),
+                      count=2)
+    assert both.cost.e_reprogram_j == 0.0 and both.reprogram_cycles == 0.0
+    assert both.program_cost.e_reprogram_j == pytest.approx(
+        2 * one.program_cost.e_reprogram_j)
+
+
+def test_technology_scaling_leaves_rram_writes():
+    # CMOS energy scales ~100x from 180nm to 22nm; RRAM write energy is
+    # device-limited and must not
+    e180 = map_matmul(8, 256, 32, EngineConfig(banks=1, arrays_per_bank=1))
+    e22 = map_matmul(8, 256, 32, EngineConfig(banks=1, arrays_per_bank=1,
+                                              technology_nm=22))
+    assert e22.cost.e_mult_j < e180.cost.e_mult_j / 50
+    assert e22.cost.e_reprogram_j == pytest.approx(e180.cost.e_reprogram_j)
+
+
+# ---------------------------------------------------------------------------
+# workload inventory + whole-model mapping
+# ---------------------------------------------------------------------------
+
+def _reference_flops(cfg, shape):
+    b, s = shape.global_batch, shape.seq_len
+    kv = s + cfg.num_prefix_tokens
+    if shape.kind == "decode":
+        return (b * fwd_flops_per_token(cfg, kv)
+                + _encoder_flops(cfg, b) + _cross_attn_flops(cfg, b))
+    t = b * (s + cfg.num_prefix_tokens)
+    return (t * fwd_flops_per_token(cfg, kv, avg_q_len=s)
+            + _encoder_flops(cfg, b) + _cross_attn_flops(cfg, t))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("sname", ["prefill_32k", "decode_32k"])
+def test_inventory_mirrors_flop_formulas(arch, sname):
+    cfg = get_config(arch)
+    shape = SHAPES[sname]
+    inv = matmul_inventory(cfg, shape)
+    assert inv, arch
+    total = sum(e.flops for e in inv)
+    assert total == pytest.approx(_reference_flops(cfg, shape), rel=1e-3)
+    assert any(e.stationary for e in inv)
+    assert any(not e.stationary for e in inv) or cfg.family == "hybrid"
+
+
+def test_map_model_and_trace_summary():
+    cfg = get_config("h2o_danube_1p8b")
+    shape = ShapeConfig("d", "decode", 4096, 64)
+    tr = Trace()
+    w = map_model(cfg, shape, EngineConfig(), trace=tr)
+    s = tr.summarize()
+    assert s["energy_j"] == pytest.approx(w.energy_j)
+    assert s["macs"] == pytest.approx(w.macs)
+    bd = w.energy_breakdown_j
+    assert sum(bd.values()) == pytest.approx(w.energy_j)
+    assert 0.0 < w.utilization <= 1.0
+    assert w.achieved_gops <= EngineConfig().peak_gops * (1 + 1e-9)
+    assert len(tr.events) == s["events"]
+    assert all(ev.as_row() for ev in tr.events)
+    # attention inclusion only adds work
+    wa = map_model(cfg, shape, EngineConfig(), include_attention=True)
+    assert wa.macs > w.macs
+    assert wa.energy_j > w.energy_j
+
+
+def test_map_workload_respects_sequential_cycles():
+    cfg = get_config("h2o_danube_1p8b")
+    shape = ShapeConfig("d", "decode", 4096, 64)
+    inv = matmul_inventory(cfg, shape)
+    w = map_workload(inv, EngineConfig(), include_attention=False)
+    assert w.total_cycles == pytest.approx(sum(
+        r.total_cycles for r in w.per_matmul))
+    assert w.latency_s == pytest.approx(w.total_cycles / 50e6)
+
+
+def test_benchmark_tables_smoke():
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import hardware
+    rows, out = hardware.engine_validation_table()
+    assert len(rows) == 7
+    rows, out = hardware.engine_workload_table(fast=True)
+    assert rows and all("," in r for r in rows)
+    for v in out.values():
+        assert 0 < v["utilization"] <= 1.0
