@@ -96,10 +96,11 @@ def main():
     path = os.path.join(ROOT, "results", "dryrun.json")
     if os.path.exists(path):
         from repro.launch.results import is_canonical
-        recs = json.load(open(path))
-        # canonical sweep only: --rules / --mesh-shape experiment records
-        # share the file but are stamped and must not inflate the summary
-        recs = [r for r in recs if is_canonical(r)]
+        all_recs = json.load(open(path))
+        # canonical sweep only: --rules / --mesh-shape / --pipeline
+        # experiment records share the file but are stamped and must not
+        # inflate the summary
+        recs = [r for r in all_recs if is_canonical(r)]
         ok = [r for r in recs if r.get("status") == "ok"]
         sk = [r for r in recs if r.get("status") == "skipped"]
         er = [r for r in recs if r.get("status") == "error"]
@@ -111,6 +112,32 @@ def main():
             print(f"Total compile time {tot_compile/60:.0f} min; "
                   f"max single-cell compile "
                   f"{max(r.get('t_compile_s', 0) for r in ok):.0f}s.")
+
+        # pipelined cells: stage-axis experiments stamped by --pipeline
+        # default-rules pipelined cells only: a --rules experiment that
+        # also pipelines is a different sharding layout and must not sit
+        # in the same table unlabelled
+        pp = [r for r in all_recs if r.get("pipeline_stages")
+              and r.get("status") == "ok"
+              and r.get("rules", "default") == "default"
+              and not r.get("mesh_shape")]
+        if pp:
+            print("\n| arch | shape | mesh | stages | microbatches | bubble"
+                  " | bottleneck | roofline frac | step (s) |")
+            print("|---|---|---|---|---|---|---|---|---|")
+            for r in pp:
+                rl = r.get("roofline", {})
+                print(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                      f" {r['pipeline_stages']} |"
+                      f" {r.get('pipeline_microbatches', '—')} |"
+                      f" {r.get('bubble_fraction', 0.0):.3f} |"
+                      f" {rl.get('bottleneck', '—')} |"
+                      f" {rl.get('roofline_fraction', 0.0):.3f} |"
+                      f" {rl.get('step_time', 0.0):.3f} |")
+            print("(bubble-adjusted: step time and roofline fraction "
+                  "include the (S-1)/(M+S-1) fill/drain idle factor; "
+                  "terms describe the target stage-block-sharded layout "
+                  "— see the records' roofline_layout stamp)")
 
 
 if __name__ == "__main__":

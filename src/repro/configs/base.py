@@ -56,6 +56,12 @@ class ModelConfig:
     encoder_frames: int = 1500
     # vlm (paligemma)
     num_prefix_tokens: int = 0
+    # pipeline parallelism: preferred stage count for the layer stack.
+    # 1 = no pipelining.  Deep configs (qwen2-72b, deepseek-v2-236b) opt
+    # in; launch code decides whether the mesh actually carries a "stage"
+    # axis (TrainPlan/make_train_step only pipeline when told to, so
+    # smoke tests and stage-less meshes are unaffected by this field).
+    pipeline_stages: int = 1
     # execution policy
     tie_embeddings: bool = True
     norm_eps: float = 1e-6

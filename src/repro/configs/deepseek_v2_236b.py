@@ -14,6 +14,10 @@ def config() -> ModelConfig:
         num_experts=160, num_experts_per_tok=6, num_shared_experts=2,
         moe_d_ff=1536, first_dense_layers=1, rope_theta=10_000.0,
         tie_embeddings=False,
+        # 59 MoE layers -> 4 stages x 15 with one zero-padded slot (the
+        # dense first layer runs as a sequential prologue); see
+        # repro.dist.pipeline.stack_stages_padded.
+        pipeline_stages=4,
     )
 
 
@@ -27,4 +31,5 @@ def smoke_config() -> ModelConfig:
         num_experts=8, num_experts_per_tok=2, num_shared_experts=1,
         moe_d_ff=64, first_dense_layers=1, tie_embeddings=False,
         attn_chunk=32,
+        pipeline_stages=2,   # 2 MoE layers -> 2 stages x 1 (host tests)
     )

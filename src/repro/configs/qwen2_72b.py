@@ -9,6 +9,7 @@ def config() -> ModelConfig:
         num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
         head_dim=128, d_ff=29568, vocab_size=152_064,
         qkv_bias=True, rope_theta=1_000_000.0, tie_embeddings=False,
+        pipeline_stages=4,   # 80 layers -> 4 stages x 20 (even split)
     )
 
 
@@ -18,4 +19,5 @@ def smoke_config() -> ModelConfig:
         num_layers=2, d_model=64, num_heads=8, num_kv_heads=2,
         head_dim=8, d_ff=160, vocab_size=512,
         qkv_bias=True, tie_embeddings=False, attn_chunk=32,
+        pipeline_stages=2,   # 2 layers -> 2 stages x 1 (host-mesh tests)
     )

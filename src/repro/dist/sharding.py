@@ -180,6 +180,25 @@ def use_rules(mesh: Mesh, rules: Mapping[str, MeshAxes]):
         _LOCAL.ctx = prev
 
 
+@contextlib.contextmanager
+def suppress_rules():
+    """Temporarily clear the ambient ShardCtx (manual-SPMD regions).
+
+    ``repro.dist.pipeline`` wraps its shard_map traces in this: inside a
+    fully manual shard_map block ``with_sharding_constraint`` is
+    meaningless (and rejected by jax), so model-internal ``shard`` calls
+    must degrade to no-ops even when the pipelined step as a whole is
+    being traced under ``use_rules``.  Restores the previous context on
+    exit; thread-local like the context it clears.
+    """
+    prev = current_ctx()
+    _LOCAL.ctx = None
+    try:
+        yield
+    finally:
+        _LOCAL.ctx = prev
+
+
 def shard(x: jax.Array, *axes: Optional[str],
           ctx: Optional[ShardCtx] = None) -> jax.Array:
     """In-graph sharding constraint by logical axis names — or a no-op.
@@ -269,6 +288,27 @@ def decode_rules(batch: int, data_size: int) -> Rules:
     })
 
 
+def pipeline_rules() -> Rules:
+    """Pipelined training layout for a ("stage", "data", "model") mesh.
+
+    ``train_rules`` plus one addition: the models' stacked-layer leading
+    dimension (logical name "stack") shards over the "stage" mesh axis, so
+    each stage device holds exactly its contiguous block of layers at rest
+    — ``stack_stages`` inside the pipelined train step is then a local
+    reshape, and ``pipeline_apply``'s ``P("stage")`` in_spec moves no layer
+    weights between stages.  The stage-awareness is deliberately *just a
+    rule*: ``partition_spec``'s divisibility fallback keeps non-divisible
+    stacks (e.g. a 1-layer dense prologue, or scan-group stacks of the
+    non-decoder families) replicated over "stage" instead of erroring, and
+    on stage-less meshes the mesh-presence fallback makes this preset
+    degrade to exactly ``train_rules``.  The AdamW moments inherit the
+    stage sharding through ``opt_state_axes``.
+    """
+    rules = train_rules()
+    rules["stack"] = "stage"
+    return rules
+
+
 def dp_only_rules() -> Rules:
     """Pure data parallelism: every mesh axis acts as batch; weights
     replicate.  The dry-run's ``--rules dp_only`` baseline for measuring
@@ -290,4 +330,5 @@ RULE_PRESETS = {
     "prefill": prefill_rules,
     "dp_only": dp_only_rules,
     "sp": train_rules,
+    "pipeline": pipeline_rules,
 }

@@ -101,22 +101,38 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                overrides: Optional[Dict[str, Any]] = None,
                compile_only: bool = True, smoke: bool = False,
                rules_preset: str = "default",
-               mesh_shape: Optional[str] = None) -> Dict[str, Any]:
+               mesh_shape: Optional[str] = None,
+               pipeline_stages: int = 0) -> Dict[str, Any]:
     """Lower + compile one cell; returns the roofline record.
 
     ``mesh_shape`` ("data,model", e.g. "64,4") reshapes the 256 chips/pod
     for §Perf sharding experiments; the canonical dry-run keeps 16x16.
+    ``pipeline_stages`` > 0 builds a stage-bearing (S, 16/S, 16) per-pod
+    mesh and lowers the *pipelined* train step (train shapes, decoder
+    family only); the record carries the stage count, pipeline
+    microbatches, and bubble fraction.
     """
     cfg = get_config(arch, smoke=smoke)
     if overrides:
         import dataclasses as _dc
         cfg = _dc.replace(cfg, **overrides)
     shape = (SMOKE_SHAPES if smoke else SHAPES)[shape_name]
+    base = {"arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single"}
     ok, reason = shape_applicable(cfg, shape)
     if not ok:
-        return {"arch": arch, "shape": shape_name,
-                "mesh": "multi" if multi_pod else "single",
-                "status": "skipped", "reason": reason}
+        return {**base, "status": "skipped", "reason": reason}
+    model = build(cfg)
+    if pipeline_stages:
+        if shape.kind != "train":
+            return {**base, "status": "skipped",
+                    "reason": "pipeline: train shapes only"}
+        if not hasattr(model, "pipeline_loss") or cfg.num_prefix_tokens:
+            return {**base, "status": "skipped",
+                    "reason": "pipeline: decoder-family stacks only"}
+        if mesh_shape:
+            return {**base, "status": "skipped",
+                    "reason": "pipeline: incompatible with --mesh-shape"}
 
     if mesh_shape:
         dd, mm = _parse_mesh_shape(mesh_shape)
@@ -125,10 +141,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         else:
             mesh = jax.make_mesh((dd, mm), ("data", "model"))
     else:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh = make_production_mesh(multi_pod=multi_pod,
+                                    pipeline_stages=pipeline_stages or 1)
     chips = mesh.devices.size
     rules = _rules_for(shape, mesh, rules_preset)
-    model = build(cfg)
+    if pipeline_stages and rules_preset == "default":
+        rules = shd.pipeline_rules()
     schema = model.schema()
     aparams = abstract_tree(schema)
     paxes = axes_tree(schema)
@@ -152,8 +170,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             dp_shards = 1
             for a in _batch_dp_axes(mesh, rules, shape.global_batch):
                 dp_shards *= mesh_axis_size(mesh, a)
-            plan = TrainPlan.for_shape(cfg, shape, dp_shards)
-            step = make_train_step(model, opt_cfg, plan)
+            plan = TrainPlan.for_shape(cfg, shape, dp_shards,
+                                       pipeline_stages=pipeline_stages or 1)
+            step = make_train_step(model, opt_cfg, plan,
+                                   mesh=mesh if pipeline_stages else None)
             jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
                              out_shardings=(state_sh, None),
                              donate_argnums=(0,))
@@ -181,10 +201,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             lowered = jitted.lower(aparams, abatch["tokens"], acache, apos)
         t_lower = time.time() - t0
         record: Dict[str, Any] = {
-            "arch": arch, "shape": shape_name,
-            "mesh": "multi" if multi_pod else "single",
-            "chips": chips, "t_lower_s": round(t_lower, 1),
+            **base, "chips": chips, "t_lower_s": round(t_lower, 1),
         }
+        if pipeline_stages:
+            record["pipeline_stages"] = plan.pipeline_stages
+            record["pipeline_microbatches"] = plan.pipeline_microbatches
+            record["bubble_fraction"] = round(plan.bubble, 6)
         if overrides:
             record["overrides"] = {k: str(v) for k, v in overrides.items()}
         if not compile_only:
@@ -242,6 +264,22 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     # ``plan.accum_steps`` below.
     dd = mesh_axis_size(mesh, "data")
     mm = mesh_axis_size(mesh, "model")
+    if pipeline_stages:
+        # fold the stage axis into the analytic model axis: a
+        # 1/(S*data*model) layer-block slice per chip.  This is the
+        # TARGET pipelined layout, not the lowered program: today's
+        # pipeline_apply gathers each stage's weights over data/model and
+        # replicates the stage compute across "model" (ROADMAP: TP inside
+        # stage bodies), so the compiled step does ~model-axis-times the
+        # per-chip compute these terms assume — the record is stamped
+        # ``roofline_layout`` so nobody mistakes it for the compiled
+        # truth (xla_raw is).  TP-collective volume is also overestimated
+        # (the analytic TP group conflates the stage axis with TP); the
+        # bubble factor below is carried by ``pipeline_bubble``.
+        mm *= mesh_axis_size(mesh, "stage")
+        record["roofline_layout"] = (
+            "target: stage-block sharding incl. TP inside stages "
+            "(lowered step still replicates stage compute over 'model')")
     if rules_preset == "dp_only":
         # weights replicate, so only batch DP matters — count the mesh
         # axes that actually divide the batch (fallback may drop some)
@@ -258,7 +296,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         moment_bytes = 2 if _opt_config(cfg).moment_dtype == jnp.bfloat16 else 4
     cell = analytic_cell(cfg, shape, mesh_spec, accum=accum,
                          remat=cfg.remat and shape.kind == "train",
-                         moment_bytes=moment_bytes)
+                         moment_bytes=moment_bytes,
+                         pipeline_bubble=record.get("bubble_fraction", 0.0))
     record["roofline"] = cell["terms"].as_dict()
     record["roofline"]["flops_breakdown"] = cell["flops"]
     record["roofline"]["hbm_breakdown"] = cell["hbm"]
@@ -287,7 +326,15 @@ def main():
                          "kind, incl. adaptive decode_rules for decode")
     ap.add_argument("--mesh-shape", default=None,
                     help="data,model reshape of the 256 chips/pod (e.g. 64,4)")
+    ap.add_argument("--pipeline", type=int, default=0,
+                    help="pipeline stage count S > 1: lower the pipelined "
+                         "train step on a (S, 16/S, 16) per-pod stage mesh "
+                         "(train shapes, decoder-family archs)")
     args = ap.parse_args()
+
+    if args.pipeline and (args.pipeline < 2 or 16 % args.pipeline):
+        ap.error(f"--pipeline {args.pipeline}: stage count must be >= 2 "
+                 f"and divide the 16-way data axis")
 
     if args.mesh_shape:  # fail fast, before any cell writes a record
         try:
@@ -307,6 +354,10 @@ def main():
     cells = []
     archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    if args.pipeline and not args.shape:
+        # pipelined cells exist for train shapes only; don't litter the
+        # results file with skip records for the other kinds
+        shapes = [s for s in shapes if SHAPES[s].kind == "train"]
     meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
     for arch in archs:
         for shape in shapes:
@@ -327,6 +378,7 @@ def main():
             "arch": arch, "shape": shape,
             "mesh": "multi" if multi else "single", "rules": args.rules,
             "mesh_shape": args.mesh_shape or "",
+            "pipeline_stages": args.pipeline,
             "overrides": {k: str(v) for k, v in overrides.items()}})
         if key in done:
             print(f"[skip-done] {key}")
@@ -345,7 +397,8 @@ def main():
                 rec = lower_cell(arch, shape, multi, overrides or None,
                                  compile_only=not args.lower_only,
                                  smoke=args.smoke, rules_preset=args.rules,
-                                 mesh_shape=args.mesh_shape)
+                                 mesh_shape=args.mesh_shape,
+                                 pipeline_stages=args.pipeline)
             finally:
                 signal.alarm(0)
         except Exception as e:
@@ -358,6 +411,8 @@ def main():
         # unstamped legacy records never match a key and simply re-run
         rec["rules"] = args.rules
         rec["mesh_shape"] = args.mesh_shape or ""
+        if args.pipeline:   # also on skips/errors, so the key matches
+            rec.setdefault("pipeline_stages", args.pipeline)
         if overrides:
             rec.setdefault("overrides",
                            {k: str(v) for k, v in overrides.items()})

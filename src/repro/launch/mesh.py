@@ -3,22 +3,51 @@
 ``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
 importing this module never touches jax device state; the dry-run sets
 XLA_FLAGS for 512 host devices *before* any jax import and then calls this.
+
+Stage-bearing meshes (``pipeline_stages > 1``) carve the "stage" axis out
+of the data axis, keeping the 256-chips/pod invariant and the 16-way model
+axis: per pod, (S, 16 // S, 16) over ("stage", "data", "model").  The
+pipeline consumes "stage" via shard_map (repro.dist.pipeline); "data"
+keeps sharding the batch inside the pipeline (``batch_axes``); "model"
+still tensor-shards the non-pipelined portions (embedding, logits/xent)
+and the at-rest parameter layout (``pipeline_rules``).
 """
 from __future__ import annotations
 
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+def make_production_mesh(*, multi_pod: bool = False,
+                         pipeline_stages: int = 1):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods.
+
+    ``pipeline_stages`` > 1 prepends a stage axis per pod, shrinking the
+    data axis: (S, 16 // S, 16) — S must divide 16.
+    """
+    s = pipeline_stages
+    if s > 1:
+        assert 16 % s == 0, f"pipeline_stages={s} must divide the 16-way data axis"
+        shape = (2, s, 16 // s, 16) if multi_pod else (s, 16 // s, 16)
+        axes = (("pod", "stage", "data", "model") if multi_pod
+                else ("stage", "data", "model"))
+        return jax.make_mesh(shape, axes)
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1):
-    """Whatever this host offers (tests / examples): (n//model, model)."""
+def make_host_mesh(model: int = 1, stages: int = 1):
+    """Whatever this host offers (tests / examples).
+
+    (n // model, model) over ("data", "model"), or with ``stages`` > 1 a
+    stage-bearing (stages, n // (stages * model), model) mesh over
+    ("stage", "data", "model").
+    """
     n = len(jax.devices())
+    if stages > 1:
+        assert n % (stages * model) == 0, (n, stages, model)
+        return jax.make_mesh((stages, n // (stages * model), model),
+                             ("stage", "data", "model"))
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))
 

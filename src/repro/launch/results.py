@@ -17,12 +17,14 @@ def cell_key(rec: Dict[str, Any]) -> Tuple:
     """Identity of a dry-run record for resume dedup and superseding.
 
     A cell is (arch, shape, mesh) plus the experiment stamps — rules
-    preset, per-pod mesh reshape, and config overrides.  Unstamped legacy
+    preset, per-pod mesh reshape, the stage axis (pipeline stage count; 0
+    = unpipelined, so pipelined and non-pipelined cells of one config
+    never supersede each other), and config overrides.  Unstamped legacy
     records (written before stamping existed) get ``rules=None`` and so
     never collide with freshly stamped keys.
     """
     return (rec["arch"], rec["shape"], rec["mesh"], rec.get("rules"),
-            rec.get("mesh_shape", ""),
+            rec.get("mesh_shape", ""), int(rec.get("pipeline_stages", 0)),
             json.dumps(rec.get("overrides", {}), sort_keys=True))
 
 
@@ -34,4 +36,5 @@ def is_canonical(rec: Dict[str, Any]) -> bool:
     pre-stamping dry-run only wrote canonical sweeps unstamped.
     """
     return (rec.get("rules", "default") == "default"
-            and not rec.get("mesh_shape"))
+            and not rec.get("mesh_shape")
+            and not rec.get("pipeline_stages"))

@@ -209,6 +209,116 @@ class DecoderModel:
             loss = loss + 0.01 * aux / cfg.num_layers
         return loss, {"loss": loss, "aux_loss": aux}
 
+    def pipeline_loss(self, params, batch, *, num_stages, num_microbatches,
+                      mesh, axis_name="stage", batch_axes=()):
+        """Pipelined train loss: equals ``loss`` up to float reassociation.
+
+        The scanned decoder stack is split into ``num_stages`` pipeline
+        stages (``stack_stages``, or ``stack_stages_padded`` for
+        non-dividing depths like deepseek-v2's 59 MoE layers) and streamed
+        as ``num_microbatches`` GPipe microbatches through
+        ``repro.dist.pipeline.pipeline_apply``; ``jax.grad`` through it is
+        backward pipelining.  Embedding, the dense prologue
+        (``first_dense_layers``), final norm and the vocab-chunked xent
+        stay outside the pipeline — replicated over "stage", sharded per
+        the ambient rules.  MoE aux losses are computed per pipeline
+        microbatch and averaged: the same semantics shift as gradient
+        accumulation (dense stacks are unaffected and match exactly).
+        """
+        import numpy as _np
+        from repro.dist.pipeline import (pipeline_apply, stack_stages,
+                                         stack_stages_padded)
+        cfg = self.cfg
+        assert cfg.num_prefix_tokens == 0, "pipelined path: no prefix tokens"
+        M, S = num_microbatches, num_stages
+        x = self._embed_in(params, batch)
+        b, s, _ = x.shape
+        assert b % M == 0, (b, M)
+        windows = _layer_windows(cfg)
+        n_dense = cfg.first_dense_layers
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        aux_outer = jnp.float32(0.0)
+
+        def remat(fn):
+            return jax.checkpoint(fn) if cfg.remat else fn
+
+        if n_dense:
+            dense_fn = remat(lambda x, lp, w: _decoder_layer_apply(
+                lp, cfg, x, positions, window=w, cache=None,
+                prefix_len=None))
+
+            def dense_body(carry, inp):
+                x, aux = carry
+                lp, w = inp
+                x = shard(x, "batch", "seq", None)
+                x2, _, a1 = dense_fn(x, lp, w)
+                return (x2, aux + a1), None
+
+            (x, aux_outer), _ = jax.lax.scan(
+                dense_body, (x, aux_outer),
+                (params["dense_layers"], jnp.asarray(windows[:n_dense])))
+
+        L = cfg.num_layers - n_dense
+        wrest = windows[n_dense:]
+        if L % S == 0:
+            sp = stack_stages(params["layers"], S)
+            w_st = jnp.asarray(wrest.reshape(S, L // S))
+            v_st = jnp.ones((S, L // S), bool)
+        else:
+            sp, v_st = stack_stages_padded(params["layers"], S)
+            per = v_st.shape[1]
+            w_st = jnp.asarray(_np.concatenate(
+                [wrest, _np.full(S * per - L, BIG_WINDOW, wrest.dtype)]
+            ).reshape(S, per))
+        def stage_fn(stage_p, xm):
+            def layer_fn(x, lp, w, v):
+                # positions from the local shape: inside the shard_map the
+                # batch dim is the per-(data-shard, microbatch) slice
+                pos = jnp.broadcast_to(jnp.arange(s)[None], (x.shape[0], s))
+                x2, _, a1 = _decoder_layer_apply(
+                    lp, cfg, x, pos, window=w, cache=None,
+                    prefix_len=None)
+                # padded slots are identities (residual layers), so the
+                # pipelined stack equals the sequential unpadded one
+                return jnp.where(v, x2, x), jnp.where(v, a1, 0.0)
+
+            lfn = remat(layer_fn)
+
+            def body(carry, inp):
+                x, aux = carry
+                x2, a1 = lfn(x, *inp)
+                return (x2, aux + a1), None
+
+            (xm, aux), _ = jax.lax.scan(
+                body, (xm, jnp.float32(0.0)),
+                (stage_p["params"], stage_p["windows"], stage_p["valid"]))
+            return xm, aux
+
+        xm = x.reshape((M, b // M) + x.shape[1:])
+        y, aux_pipe = pipeline_apply(
+            stage_fn, {"params": sp, "windows": w_st, "valid": v_st}, xm,
+            mesh, axis_name, batch_axes=batch_axes, with_aux=True)
+        h = y.reshape(b, s, -1)
+        # aux_pipe sums over (microbatch x data-shard) chunks — each data
+        # shard computes its own MoE statistics inside the manual region —
+        # so normalise to the mean over chunks (grad accumulation makes
+        # the same per-chunk redefinition of batch statistics)
+        sizes = dict(mesh.shape)
+        chunks = M
+        for a in batch_axes:
+            chunks *= sizes.get(a, 1)
+        aux_total = aux_outer + aux_pipe / chunks
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+        total, denom = chunked_softmax_xent(
+            h, params["embed"] if cfg.tie_embeddings else params["head"].T,
+            labels, mask, softcap=cfg.logit_softcap)
+        loss = total / jnp.maximum(denom, 1.0)
+        if cfg.num_experts:
+            loss = loss + 0.01 * aux_total / cfg.num_layers
+        return loss, {"loss": loss, "aux_loss": aux_total}
+
     def cache_spec(self, batch: int, length: int):
         cfg = self.cfg
         ring = cfg.ring_cache

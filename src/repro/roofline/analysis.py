@@ -90,6 +90,7 @@ class RooflineTerms:
     coll_bytes_per_chip: float   # per-chip ICI traffic
     chips: int
     model_flops: float = 0.0     # 6*N*D useful FLOPs for the workload
+    pipeline_bubble: float = 0.0  # (S-1)/(M+S-1) idle fraction; 0 = no PP
 
     @property
     def t_compute(self) -> float:
@@ -111,8 +112,14 @@ class RooflineTerms:
 
     @property
     def step_time(self) -> float:
-        """Roofline step time = max of the three terms (perfect overlap)."""
-        return max(self.t_compute, self.t_memory, self.t_collective)
+        """Roofline step time = max of the three terms (perfect overlap),
+        stretched by the pipeline bubble when the cell is pipelined: the
+        fill/drain triangles idle every stage for ``pipeline_bubble`` of
+        the schedule, so achievable time is ideal / (1 - bubble)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if self.pipeline_bubble:
+            t /= (1.0 - self.pipeline_bubble)
+        return t
 
     @property
     def useful_flops_fraction(self) -> float:
@@ -136,6 +143,8 @@ class RooflineTerms:
             "t_collective": self.t_collective, "bottleneck": self.bottleneck,
             "useful_flops_fraction": self.useful_flops_fraction,
             "roofline_fraction": self.roofline_fraction,
+            "pipeline_bubble": self.pipeline_bubble,
+            "step_time": self.step_time,
         }
 
 

@@ -581,7 +581,8 @@ def cell_collective_bytes(cfg: ModelConfig, shape: ShapeConfig,
 
 def analytic_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
                   accum: int = 1, remat: bool = True,
-                  moment_bytes: int = 4) -> Dict[str, float]:
+                  moment_bytes: int = 4,
+                  pipeline_bubble: float = 0.0) -> Dict[str, float]:
     from repro.roofline.analysis import RooflineTerms, model_flops_estimate
     fl = cell_flops(cfg, shape, remat=remat)
     mem = cell_hbm_bytes(cfg, shape, mesh, accum=accum,
@@ -590,7 +591,8 @@ def analytic_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     terms = RooflineTerms(
         flops=fl["total"], hbm_bytes=mem["total"],
         coll_bytes_per_chip=coll["total"], chips=mesh.chips,
-        model_flops=model_flops_estimate(cfg, shape))
+        model_flops=model_flops_estimate(cfg, shape),
+        pipeline_bubble=pipeline_bubble)
     return {"terms": terms, "flops": fl, "hbm": mem, "coll": coll}
 
 

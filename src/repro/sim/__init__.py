@@ -18,6 +18,7 @@ answers what a *real* MatMul workload achieves on a concrete engine:
 3.28 TOPS/mm²) to < 0.5 %.  See docs/oisma_engine.md.
 """
 from repro.sim.array import ArrayModel, TileCost
+from repro.sim.calibration import DEFAULT_WRITE_CAL, RRAMWriteCalibration
 from repro.sim.dataflow import DATAFLOWS, Dataflow, get_dataflow, \
     vmm_saving_fraction
 from repro.sim.mapper import (EngineConfig, MatmulReport, WorkloadReport,
@@ -26,7 +27,8 @@ from repro.sim.mapper import (EngineConfig, MatmulReport, WorkloadReport,
 from repro.sim.trace import TileEvent, Trace
 
 __all__ = [
-    "ArrayModel", "TileCost", "DATAFLOWS", "Dataflow", "get_dataflow",
+    "ArrayModel", "TileCost", "DEFAULT_WRITE_CAL", "RRAMWriteCalibration",
+    "DATAFLOWS", "Dataflow", "get_dataflow",
     "vmm_saving_fraction", "EngineConfig", "MatmulReport", "WorkloadReport",
     "ideal_workload", "map_matmul", "map_model", "map_workload", "validate",
     "TileEvent", "Trace",

@@ -21,11 +21,12 @@ tilings:
   weight read IS the multiplication, so matmuls never pay this; it is
   exposed for non-compute accesses (weight readback/verify).
 * reprogram: RRAM writes when a weight tile is (re)programmed.  The paper
-  does not publish write costs, so these are documented assumptions,
-  overridable per ArrayModel: 10 pJ/bit and a 1 µs program pulse per
-  wordline row — typical for 1T1R HfO2 RRAM.  Write energy is
-  device-limited and does NOT scale with the CMOS node; write *time* is
-  fixed in seconds (stall cycles grow with clock frequency).
+  does not publish write costs; the assumptions (10 pJ/bit, 1 µs/row)
+  live in ONE place — ``repro.sim.calibration.RRAMWriteCalibration`` —
+  and thread EngineConfig -> ArrayModel -> ``program_tile``, so a future
+  calibration against published data is a single override.  Write energy
+  is device-limited and does NOT scale with the CMOS node; write *time*
+  is fixed in seconds (stall cycles grow with clock frequency).
 
 Technology scaling mirrors oisma_cost's DeepScaleTool endpoint factors.
 """
@@ -35,6 +36,7 @@ import dataclasses
 from typing import Tuple
 
 from repro.core import oisma_cost as oc
+from repro.sim.calibration import DEFAULT_WRITE_CAL, RRAMWriteCalibration
 
 BITS_PER_WORD = 8                       # compressed BP8
 ROWS_PER_ARRAY = oc.ARRAY_ROWS          # 128 wordlines
@@ -51,9 +53,11 @@ E_INPUT_LOAD_FJ_PER_BIT = (
     / (1.0 - 1.0 / WORDS_PER_ROW))
 E_MULT_STATIC_FJ_PER_BIT = oc.E_MULT_SINGLE_FJ_PER_BIT - E_INPUT_LOAD_FJ_PER_BIT
 
-# --- RRAM programming assumptions (not published; see module docstring) ----
-RRAM_WRITE_FJ_PER_BIT = 10_000.0
-RRAM_WRITE_S_PER_ROW = 1e-6
+# --- RRAM programming assumptions (single source: sim/calibration.py) ------
+#: legacy aliases of the default calibration's numbers; new code should
+#: read them off an ArrayModel/EngineConfig ``write_cal`` instead
+RRAM_WRITE_FJ_PER_BIT = DEFAULT_WRITE_CAL.write_fj_per_bit
+RRAM_WRITE_S_PER_ROW = DEFAULT_WRITE_CAL.write_s_per_row
 
 # --- macro power: array + accumulation periphery ---------------------------
 #: The abstract's 0.789 TOPS/W is the whole-macro endpoint; Table III's
@@ -95,8 +99,15 @@ class TileCost:
 class ArrayModel:
     """One 4 kB OISMA array at a technology node."""
     technology_nm: int = 180
-    rram_write_fj_per_bit: float = RRAM_WRITE_FJ_PER_BIT
-    rram_write_s_per_row: float = RRAM_WRITE_S_PER_ROW
+    write_cal: RRAMWriteCalibration = DEFAULT_WRITE_CAL
+
+    @property
+    def rram_write_fj_per_bit(self) -> float:
+        return self.write_cal.write_fj_per_bit
+
+    @property
+    def rram_write_s_per_row(self) -> float:
+        return self.write_cal.write_s_per_row
 
     @property
     def _oc(self) -> oc.OISMAConfig:

@@ -1,0 +1,42 @@
+"""RRAM write-cost calibration: the one place the assumptions live.
+
+The OISMA paper publishes read/compute energies (Table II) but not RRAM
+*write* costs, so the simulator's reprogramming model rests on two
+documented assumptions, typical for 1T1R HfO2 RRAM:
+
+* **10 pJ/bit** write energy — SET/RESET pulse energy per cell.  Device-
+  limited (filament physics), so it does NOT scale with the CMOS node the
+  periphery is built in.
+* **1 µs per wordline row** program time — one program-verify pulse per
+  row.  Fixed in *seconds*; the stall it causes in *cycles* therefore
+  grows with the clock frequency of scaled nodes.
+
+Everything in ``repro.sim`` that prices a weight (re)program reads these
+two numbers from one :class:`RRAMWriteCalibration` instance, threaded
+``EngineConfig -> ArrayModel -> program_tile``.  To study a different
+device point (e.g. if the paper group publishes measurements, per the
+ROADMAP calibration item), override at the engine level::
+
+    cal = RRAMWriteCalibration(write_fj_per_bit=2_000.0,
+                               write_s_per_row=100e-9,
+                               source="foundry X measured")
+    EngineConfig(write_cal=cal)
+
+and every tile class, stall and energy row downstream follows.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RRAMWriteCalibration:
+    """Write energy/time of the 1T1R RRAM cells (assumed, not published)."""
+    write_fj_per_bit: float = 10_000.0   # 10 pJ/bit
+    write_s_per_row: float = 1e-6        # 1 µs program pulse per row
+    #: provenance tag carried into reports/tables
+    source: str = "assumed: typical 1T1R HfO2 RRAM (paper publishes no writes)"
+
+
+#: the repo-wide default; import this rather than re-literal-ing the numbers
+DEFAULT_WRITE_CAL = RRAMWriteCalibration()

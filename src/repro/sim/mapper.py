@@ -33,6 +33,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 from repro.core import oisma_cost as oc
 from repro.sim import array as arr
 from repro.sim.array import ArrayModel, TileCost
+from repro.sim.calibration import DEFAULT_WRITE_CAL, RRAMWriteCalibration
 from repro.sim.dataflow import Dataflow, get_dataflow
 from repro.sim.trace import TileEvent, Trace
 
@@ -49,6 +50,9 @@ class EngineConfig:
     #: charge the first residency of stationary weights into the totals
     #: (default: weights are preloaded; the cost is still reported)
     count_initial_programming: bool = False
+    #: RRAM write-cost assumptions — the single override point for the
+    #: whole engine (see repro.sim.calibration)
+    write_cal: RRAMWriteCalibration = DEFAULT_WRITE_CAL
 
     @property
     def arrays(self) -> int:
@@ -56,7 +60,8 @@ class EngineConfig:
 
     @property
     def array_model(self) -> ArrayModel:
-        return ArrayModel(technology_nm=self.technology_nm)
+        return ArrayModel(technology_nm=self.technology_nm,
+                          write_cal=self.write_cal)
 
     @property
     def _oc(self) -> oc.OISMAConfig:

@@ -4,6 +4,15 @@ The global batch is reshaped to (accum, micro, ...) and scanned: activation
 memory is bounded by one microbatch while arithmetic intensity per step is
 unchanged.  Remat (per layer, inside the model's layer scan) and the
 vocab-chunked cross-entropy keep the peak footprint flat in depth and vocab.
+
+Stage-aware path: when ``TrainPlan.pipeline_stages > 1`` the loss inside
+each accumulation step is the model's ``pipeline_loss`` — the scanned layer
+stack split over the mesh's "stage" axis and streamed as
+``pipeline_microbatches`` GPipe microbatches (repro.dist.pipeline), with
+``jax.grad`` through the schedule providing pipelined backward.  Gradient
+accumulation composes on the outside: each accum step is one pipeline
+flush, so the bubble fraction depends only on the per-flush microbatch
+count.
 """
 from __future__ import annotations
 
@@ -15,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.pipeline import bubble_fraction
 from repro.optim.optimizer import (OptimizerConfig, adamw_update,
                                    init_opt_state)
 
@@ -22,35 +32,122 @@ from repro.optim.optimizer import (OptimizerConfig, adamw_update,
 @dataclasses.dataclass(frozen=True)
 class TrainPlan:
     accum_steps: int           # gradient accumulation steps
-    micro_batch: int           # global microbatch size
+    micro_batch: int           # global microbatch size (per accum step)
+    pipeline_stages: int = 1   # S: "stage"-axis size (1 = no pipelining)
+    pipeline_microbatches: int = 1   # M: microbatches per pipeline flush
+
+    @property
+    def bubble(self) -> float:
+        """Pipeline idle fraction (S - 1) / (M + S - 1); 0 unpipelined."""
+        return bubble_fraction(self.pipeline_stages,
+                               self.pipeline_microbatches)
 
     @staticmethod
     def for_shape(cfg: ModelConfig, shape: ShapeConfig, data_shards: int,
                   target_tokens_per_shard: int = 16_384,
                   act_budget_bytes: float = 6e9,
-                  seq_shards: int = 1) -> "TrainPlan":
+                  seq_shards: int = 1,
+                  pipeline_stages: int = 1) -> "TrainPlan":
         """Pick grad-accumulation so the remat-saved layer inputs
         (num_layers x micro_tokens_local x d_model x 2B / seq_shards) fit in
         ``act_budget_bytes`` of HBM.  ``seq_shards`` > 1 models sequence
-        parallelism (saved activations sharded over the model axis)."""
-        cap = act_budget_bytes * seq_shards / (
-            max(1, cfg.num_layers) * cfg.d_model * 2.0)
-        target = int(min(target_tokens_per_shard, max(cap, shape.seq_len // 8)))
-        per_shard = max(1, shape.global_batch // data_shards)
-        micro_per_shard = max(1, target // shape.seq_len)
-        accum = max(1, per_shard // micro_per_shard)
-        while shape.global_batch % accum:
-            accum -= 1
-        return TrainPlan(accum_steps=accum,
-                         micro_batch=shape.global_batch // accum)
+        parallelism (saved activations sharded over the model axis).
+
+        With ``pipeline_stages`` S > 1, stages and pipeline microbatches M
+        are picked *jointly* against the pipelined remat memory model: a
+        stage stores the scan-tick carries — (M + S - 1) activations of
+        one pipeline microbatch — plus L/S per-layer remat inputs of the
+        microbatch being recomputed, i.e.
+
+            act(M) = (tokens_local / M) * d_model * 2 * (M + S - 1 + L/S).
+
+        Preference order: accum = 1 (each accum step is a separate flush,
+        so only M amortises the bubble), then the smallest M >= 3(S - 1)
+        (bubble <= 25 %) whose act(M) fits the budget; M grows — and accum
+        after it — until the model fits or the batch runs out.
+        """
+        if pipeline_stages <= 1:
+            cap = act_budget_bytes * seq_shards / (
+                max(1, cfg.num_layers) * cfg.d_model * 2.0)
+            target = int(min(target_tokens_per_shard,
+                             max(cap, shape.seq_len // 8)))
+            per_shard = max(1, shape.global_batch // data_shards)
+            micro_per_shard = max(1, target // shape.seq_len)
+            accum = max(1, per_shard // micro_per_shard)
+            while shape.global_batch % accum:
+                accum -= 1
+            return TrainPlan(accum_steps=accum,
+                             micro_batch=shape.global_batch // accum)
+
+        S = pipeline_stages
+        L = max(1, cfg.num_layers)
+        gb = shape.global_batch
+        ds = max(1, data_shards)
+
+        def act_bytes(accum: int, m: int) -> float:
+            tokens_local = (gb // accum // ds) * shape.seq_len
+            per_micro = tokens_local / m * cfg.d_model * 2.0 / seq_shards
+            return per_micro * (m + S - 1 + L / S)
+
+        m_floor = max(1, 3 * (S - 1))
+        best = None
+        for accum in (a for a in range(1, gb + 1) if gb % a == 0):
+            micro = gb // accum
+            # a microbatch must still tile the batch-sharding axes: the
+            # pipeline's shard_map splits the per-microbatch batch dim
+            # exactly ds ways (no GSPMD divisibility fallback in there)
+            elig = [m for m in range(1, micro + 1)
+                    if micro % m == 0 and (micro // m) % ds == 0]
+            if not elig:
+                continue
+            cand = [m for m in elig if m >= min(m_floor, elig[-1])]
+            if best is None:   # fallback: least accum, most microbatches
+                best = (accum, (cand or elig)[-1])
+            for m in cand:
+                if act_bytes(accum, m) <= act_budget_bytes:
+                    return TrainPlan(accum_steps=accum, micro_batch=micro,
+                                     pipeline_stages=S,
+                                     pipeline_microbatches=m)
+        accum, m = best if best else (1, 1)
+        return TrainPlan(accum_steps=accum, micro_batch=gb // accum,
+                         pipeline_stages=S, pipeline_microbatches=m)
 
 
-def make_train_step(model, opt_cfg: OptimizerConfig, plan: TrainPlan):
-    """Returns train_step(state, batch) -> (state, metrics)."""
+def make_train_step(model, opt_cfg: OptimizerConfig, plan: TrainPlan,
+                    mesh=None):
+    """Returns train_step(state, batch) -> (state, metrics).
 
-    def loss_fn(params, micro):
-        loss, metrics = model.loss(params, micro)
-        return loss, metrics
+    ``mesh`` is required (and must carry a "stage" axis of size
+    ``plan.pipeline_stages``) when the plan pipelines; the per-microbatch
+    batch dimension shards over whatever of ("pod", "data") the mesh has.
+    """
+    if plan.pipeline_stages > 1:
+        assert mesh is not None and "stage" in mesh.axis_names, (
+            "pipelined TrainPlan needs a stage-bearing mesh")
+        assert dict(mesh.shape)["stage"] == plan.pipeline_stages, (
+            dict(mesh.shape), plan.pipeline_stages)
+        # shard the per-microbatch batch dim over whatever of (pod, data)
+        # actually divides it — shard_map specs have no divisibility
+        # fallback, so filter here instead of failing at trace time
+        sizes = dict(mesh.shape)
+        rem = plan.micro_batch // plan.pipeline_microbatches
+        batch_axes = []
+        for a in ("pod", "data"):
+            if a in mesh.axis_names and rem % sizes[a] == 0:
+                batch_axes.append(a)
+                rem //= sizes[a]
+        batch_axes = tuple(batch_axes)
+
+        def loss_fn(params, micro):
+            loss, metrics = model.pipeline_loss(
+                params, micro, num_stages=plan.pipeline_stages,
+                num_microbatches=plan.pipeline_microbatches, mesh=mesh,
+                batch_axes=batch_axes)
+            return loss, metrics
+    else:
+        def loss_fn(params, micro):
+            loss, metrics = model.loss(params, micro)
+            return loss, metrics
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 

@@ -37,13 +37,41 @@ def train(model, cfg: ModelConfig, shape: ShapeConfig,
           tcfg: TrainerConfig, opt_cfg: Optional[OptimizerConfig] = None,
           injector: Optional[FailureInjector] = None,
           step_fn=None, state=None,
-          on_metrics: Optional[Callable[[int, Dict], None]] = None):
+          on_metrics: Optional[Callable[[int, Dict], None]] = None,
+          mesh=None):
     """Returns (state, history).  Restartable: call again after a crash and
-    it resumes from the newest checkpoint."""
+    it resumes from the newest checkpoint.
+
+    Stage-aware path: pass a mesh carrying a "stage" axis (e.g.
+    ``launch.mesh.make_host_mesh(stages=...)``) to train pipelined at the
+    mesh's stage count — the TrainPlan then picks pipeline microbatches
+    jointly with grad accumulation, and each step is traced under the
+    ``pipeline`` sharding preset.  Without a stage mesh the loop is
+    unchanged and mesh-agnostic (``cfg.pipeline_stages`` is only launch
+    code's hint for *building* a stage mesh, never a trainer switch).
+    """
     opt_cfg = opt_cfg or OptimizerConfig(total_steps=tcfg.total_steps,
                                          warmup_steps=5)
-    plan = TrainPlan.for_shape(cfg, shape, data_shards=1)
-    step_fn = step_fn or jax.jit(make_train_step(model, opt_cfg, plan))
+    from repro.launch.mesh import mesh_axis_size
+    # the mesh is the authority: a stage-bearing mesh is an explicit
+    # opt-in, and its stage count wins over the config's preference
+    stages = mesh_axis_size(mesh, "stage") if mesh is not None else 1
+    data_shards = mesh_axis_size(mesh, "data") if mesh is not None else 1
+    plan = TrainPlan.for_shape(cfg, shape, data_shards=data_shards,
+                               pipeline_stages=stages)
+    if step_fn is None:
+        jitted = jax.jit(make_train_step(
+            model, opt_cfg, plan, mesh=mesh if stages > 1 else None))
+        if stages > 1:
+            from repro.dist import sharding as shd
+
+            def step_fn(state, batch):
+                # the rules context matters at trace time (first call);
+                # steady-state calls replay the cached jaxpr
+                with shd.use_rules(mesh, shd.pipeline_rules()):
+                    return jitted(state, batch)
+        else:
+            step_fn = jitted
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
                       global_batch=shape.global_batch, seed=tcfg.seed)
 
