@@ -5,11 +5,16 @@ devices, streams microbatches through the GPipe schedule, checks the
 pipelined forward against the sequential reference, and runs the
 hand-scheduled 1F1B forward+backward executor against the sequential VJP.
 Respects an already-forced device count (CI runs this with 8 fake CPU
-devices, exercising a (stage=4, data=2) mesh); defaults to 4.  Run from
-the repo root:
+devices, exercising a (stage=4, data=2) mesh); defaults to 4.
+
+With 16+ devices (CI's second invocation) the demo additionally runs the
+COMPOSED 3-axis path on a (stage=4, data=2, model=2) mesh: a real decoder
+model's ``pipeline_loss`` with tensor parallelism *inside* the pipelined
+stage bodies (model-sharded projections + manual psums, repro.dist.tp),
+checked against the plain sequential loss/grads.  Run from the repo root:
 
     PYTHONPATH=src python examples/pipeline_parallel.py
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    XLA_FLAGS=--xla_force_host_platform_device_count=16 \
         PYTHONPATH=src python examples/pipeline_parallel.py
 """
 import os
@@ -90,7 +95,59 @@ def main():
     print(f"1F1B executor: max |y - y_ref| = "
           f"{float(jnp.abs(y - y_ref).max()):.2e}, grad rel err = {gerr:.2e}")
     assert float(jnp.abs(y - y_ref).max()) < 1e-5 and gerr < 1e-5
+
+    if n >= 16 and n % 16 == 0:
+        composed_tp_in_stage()
     print("OK")
+
+
+def composed_tp_in_stage():
+    """(stage=4, data=2, model=2): TP inside pipelined decoder stages."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, batch_at
+    from repro.dist import sharding as shd
+    from repro.dist import tp as mtp
+    from repro.models import build
+
+    n = len(jax.devices())
+    mesh = make_host_mesh(model=2, stages=4)          # (4, n//8, 2)
+    # a 4-layer decoder so every one of the 4 stages holds one real layer
+    cfg = dataclasses.replace(get_config("qwen2_72b", smoke=True),
+                              num_layers=4, pipeline_stages=4)
+    model = build(cfg)
+    plan = mtp.plan_stage_tp(cfg, mesh)
+    assert plan is not None and plan.shard_heads and plan.shard_ffn, plan
+    print(f"composed mesh {dict(mesh.shape)}; TP plan {plan}")
+
+    from repro.train.train_step import init_state
+    from repro.optim.optimizer import OptimizerConfig
+    state = init_state(model, jax.random.key(0),
+                       OptimizerConfig(total_steps=1))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, 0).items()}
+
+    def pipe_loss(params, b):
+        return model.pipeline_loss(params, b, num_stages=4,
+                                   num_microbatches=4, mesh=mesh,
+                                   batch_axes=("data",))
+
+    with shd.use_rules(mesh, shd.pipeline_rules()):
+        (l_p, _), g_p = jax.jit(jax.value_and_grad(
+            pipe_loss, has_aux=True))(state["params"], batch)
+    (l_s, _), g_s = jax.jit(jax.value_and_grad(
+        model.loss, has_aux=True))(state["params"], batch)
+    rel = 0.0
+    for a, b_ in zip(jax.tree.leaves(g_p), jax.tree.leaves(g_s)):
+        a32, b32 = a.astype(jnp.float32), b_.astype(jnp.float32)
+        rel = max(rel, float(jnp.abs(a32 - b32).max())
+                  / (float(jnp.abs(b32).max()) + 1e-9))
+    l_p, l_s = float(l_p), float(l_s)
+    print(f"TP-in-stage: loss pipelined={l_p:.6f} sequential={l_s:.6f} "
+          f"grad rel err={rel:.2e}")
+    assert abs(l_p - l_s) < 2e-3 and rel < 6e-2, (l_p, l_s, rel)
+    print("composed 3-axis (stage x data x model) path OK")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Integrity gate for results/dryrun.json — run by CI on every push.
+
+Checks, in order:
+
+  1. every record carries the base schema fields (arch/shape/mesh/status,
+     plus the rules/mesh_shape experiment stamps the resume logic keys on);
+  2. "ok" records carry the measurement payload (chips, memory, xla_raw);
+  3. cell keys (``repro.launch.results.cell_key`` — includes the stage
+     axis) are unique: a duplicate means the supersede logic regressed;
+  4. pipelined cells (pipeline_stages > 0, status ok) carry the stage
+     stamps (pipeline_microbatches, bubble_fraction) and an analytic
+     roofline, and NONE of them is stamped ``roofline_layout: target…`` —
+     the analytic terms must describe the shipped TP-in-stage layout, not
+     an aspirational one;
+  5. the canonical pipelined set is present: qwen2-72b and
+     deepseek-v2-236b on train_4k, single and multi mesh.
+
+Exit code 0 = gate passes; 1 = any violation (all violations printed).
+
+Usage:  PYTHONPATH=src python scripts/check_results.py [results/dryrun.json]
+"""
+from __future__ import annotations
+
+import collections
+import json
+import sys
+
+from repro.launch.results import cell_key
+
+BASE_FIELDS = ("arch", "shape", "mesh", "status")
+OK_FIELDS = ("chips", "memory", "xla_raw")
+PIPELINED_FIELDS = ("pipeline_stages", "pipeline_microbatches",
+                    "bubble_fraction", "roofline")
+EXPECTED_PIPELINED = {
+    ("qwen2_72b", "train_4k", "single"),
+    ("qwen2_72b", "train_4k", "multi"),
+    ("deepseek_v2_236b", "train_4k", "single"),
+    ("deepseek_v2_236b", "train_4k", "multi"),
+}
+
+
+def check(records) -> list:
+    errors = []
+    for i, r in enumerate(records):
+        tag = f"record[{i}] {r.get('arch')}/{r.get('shape')}/{r.get('mesh')}"
+        for f in BASE_FIELDS:
+            if f not in r:
+                errors.append(f"{tag}: missing field {f!r}")
+        if "rules" not in r:
+            errors.append(f"{tag}: missing 'rules' stamp (resume identity)")
+        if r.get("status") == "ok":
+            for f in OK_FIELDS:
+                if f not in r:
+                    errors.append(f"{tag}: ok record missing {f!r}")
+
+    keys = collections.Counter(cell_key(r) for r in records)
+    for key, n in sorted(keys.items()):
+        if n > 1:
+            errors.append(f"duplicate cell_key x{n}: {key}")
+
+    pipelined_ok = set()
+    for i, r in enumerate(records):
+        if not r.get("pipeline_stages") or r.get("status") != "ok":
+            continue
+        tag = (f"pipelined {r.get('arch')}/{r.get('shape')}/"
+               f"{r.get('mesh')}")
+        for f in PIPELINED_FIELDS:
+            if f not in r:
+                errors.append(f"{tag}: missing {f!r}")
+        layout = str(r.get("roofline_layout", ""))
+        if layout.startswith("target"):
+            errors.append(
+                f"{tag}: roofline_layout is still a 'target' stamp "
+                f"({layout!r}) — analytic terms must describe the "
+                f"shipped TP-in-stage layout")
+        pipelined_ok.add((r.get("arch"), r.get("shape"), r.get("mesh")))
+
+    for cell in sorted(EXPECTED_PIPELINED - pipelined_ok):
+        errors.append(f"missing canonical pipelined cell: {cell}")
+    return errors
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    with open(path) as f:
+        records = json.load(f)
+    errors = check(records)
+    for e in errors:
+        print(f"FAIL: {e}")
+    if errors:
+        print(f"{len(errors)} violation(s) in {path} ({len(records)} records)")
+        return 1
+    print(f"OK: {path} ({len(records)} records, "
+          f"{sum(1 for r in records if r.get('pipeline_stages'))} pipelined)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

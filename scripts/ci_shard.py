@@ -1,0 +1,48 @@
+#!/usr/bin/env python
+"""Deterministic pytest-file sharding for the CI tier-1 matrix.
+
+Prints the test files belonging to one shard, one per line, so CI can run
+
+    python -m pytest -x -q $(python scripts/ci_shard.py --shard 1 --num-shards 2)
+
+Round-robin over the sorted file list: every file lands in exactly one
+shard for any ``--num-shards``, and shard sizes differ by at most one.
+(Assignments are index-based, so adding a test file can reshuffle later
+files between shards — fine for CI, where shards share nothing.)
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def shard_files(test_dir: pathlib.Path, shard: int, num_shards: int):
+    files = sorted(p for p in test_dir.glob("test_*.py"))
+    return [p for i, p in enumerate(files) if i % num_shards == shard - 1]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shard", type=int, required=True, help="1-based")
+    ap.add_argument("--num-shards", type=int, required=True)
+    ap.add_argument("--test-dir", default="tests")
+    args = ap.parse_args()
+    if not (1 <= args.shard <= args.num_shards):
+        ap.error(f"--shard must be in [1, {args.num_shards}]")
+    picked = shard_files(pathlib.Path(args.test_dir), args.shard,
+                         args.num_shards)
+    if not picked:
+        print(f"shard {args.shard}/{args.num_shards}: no files",
+              file=sys.stderr)
+        return 1
+    try:
+        for p in picked:
+            print(p)
+    except BrokenPipeError:  # reader (e.g. `| head`) closed early
+        return 0
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

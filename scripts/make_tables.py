@@ -136,8 +136,9 @@ def main():
                       f" {rl.get('step_time', 0.0):.3f} |")
             print("(bubble-adjusted: step time and roofline fraction "
                   "include the (S-1)/(M+S-1) fill/drain idle factor; "
-                  "terms describe the target stage-block-sharded layout "
-                  "— see the records' roofline_layout stamp)")
+                  "terms describe the composed stage-block + TP-in-stage "
+                  "layout the lowered step executes — see the records' "
+                  "roofline_layout stamp)")
 
 
 if __name__ == "__main__":

@@ -11,9 +11,14 @@ Two orthogonal pieces:
     dedicated "stage" mesh axis: stack layer parameters into stages, run
     microbatches through a collective-permute schedule, and account for
     the pipeline bubble.
+  * :mod:`repro.dist.tp` — tensor parallelism *inside* the pipeline's
+    manual shard_map regions: a per-config plan of which weight dims
+    shard over the TP axes, the at-rest PartitionSpecs that carry that
+    layout across the shard_map boundary, and the ambient context the
+    model layers consult to run on local shards with manual psums.
 
-Neither module touches jax device state at import time (same rule as
+No module here touches jax device state at import time (same rule as
 ``repro.launch.mesh``), so the dry-run can force a 512-device host platform
 before anything else runs.
 """
-from repro.dist import pipeline, sharding  # noqa: F401
+from repro.dist import pipeline, sharding, tp  # noqa: F401

@@ -11,8 +11,12 @@ per-stage programs with point-to-point ``lax.ppermute`` transfers:
   transposes to the reversed permutation, which is exactly backward
   pipelining), so the production train step builds its loss on top of
   this and gets pipelined backward for free.  Composes with data
-  parallelism: ``batch_axes`` shards the per-microbatch batch dimension
-  over the named mesh axes inside the same shard_map.
+  parallelism (``batch_axes`` shards the per-microbatch batch dimension
+  over the named mesh axes inside the same shard_map) AND with tensor
+  parallelism inside the stage bodies (``param_specs`` keeps the TP
+  weight dims sharded at rest across the boundary; the stage_fn runs on
+  local shards with the ``repro.dist.tp`` collectives), so a
+  ("stage", "data", "model") mesh is fully composed in one manual region.
 * ``pipeline_grads`` — a hand-scheduled combined forward+backward driven
   by an explicit :class:`PipelineSchedule` table, supporting both
   ``"gpipe"`` and ``"1f1b"`` (PipeDream-flush / Megatron non-interleaved)
@@ -114,6 +118,7 @@ def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
 def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jax.Array,
                    mesh: Mesh, axis_name: str = "stage", *,
                    batch_axes: Tuple[str, ...] = (),
+                   param_specs: Any = None,
                    with_aux: bool = False):
     """Run microbatches through a parameter-sharded GPipe pipeline.
 
@@ -131,6 +136,15 @@ def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jax.Array,
       batch_axes: mesh axes the per-microbatch batch dimension (axis 1 of
         ``x``) shards over — this is how the pipeline composes with data
         parallelism on a (stage, data, ...) mesh.  Empty = replicated.
+      param_specs: optional per-leaf PartitionSpec pytree for
+        ``stage_params`` (``repro.dist.tp.stage_param_specs``).  This is
+        how tensor parallelism composes *inside* the stage bodies: leaves
+        stay sharded over the TP mesh axes at rest across the shard_map
+        boundary (no per-step TP gather), and ``stage_fn`` — which then
+        sees local weight shards — is responsible for the matching manual
+        psums (the model layers consult ``repro.dist.tp.current_tp``).
+        None = the pre-TP behaviour: every leaf enters sharded over
+        ``axis_name`` only, i.e. gathered over the other mesh axes.
       with_aux: stage_fn additionally returns a scalar accumulated over
         all (stage, microbatch) pairs — MoE aux losses ride through here.
         Contributions from fill/drain ticks (where a stage computes on
@@ -190,9 +204,10 @@ def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jax.Array,
     from repro.dist.sharding import suppress_rules
     bspec = P(None, tuple(batch_axes)) if batch_axes else P()
     aspec = P(axis_name, tuple(batch_axes) or None)
+    pspec = param_specs if param_specs is not None else P(axis_name)
     with suppress_rules():  # shard() must no-op inside the manual region
         y, aux = shard_map(per_stage, mesh=mesh,
-                           in_specs=(P(axis_name), bspec),
+                           in_specs=(pspec, bspec),
                            out_specs=(bspec, aspec),
                            check_rep=False)(stage_params, x)
     return (y, aux.sum()) if with_aux else y
@@ -335,6 +350,7 @@ SCHEDULES = {"gpipe": gpipe_schedule, "1f1b": one_f_one_b_schedule}
 def pipeline_grads(stage_fn: Callable, stage_params: Any, x: jax.Array,
                    gy: jax.Array, mesh: Mesh, axis_name: str = "stage", *,
                    batch_axes: Tuple[str, ...] = (),
+                   param_specs: Any = None,
                    schedule: str = "1f1b"):
     """Hand-scheduled pipelined forward + backward in one tick loop.
 
@@ -346,6 +362,21 @@ def pipeline_grads(stage_fn: Callable, stage_params: Any, x: jax.Array,
     stage-input activations (min(S, M) for 1F1B, M for GPipe); backward
     ticks recompute the stage forward via ``jax.vjp`` from the stored
     input, so no per-layer residuals persist between ticks.
+
+    ``param_specs`` composes tensor parallelism into the stage bodies,
+    mirroring ``pipeline_apply``: the per-leaf at-rest layout keeps
+    TP-sharded leaves across the boundary without gathering.  Because this
+    executor hand-rolls its backward (``jax.vjp`` per tick, replicated
+    cotangents), the whole region traces under
+    ``repro.dist.tp.explicit_vjp_psums``: a TP-parallel ``stage_fn`` must
+    route its collectives through ``repro.dist.tp`` (``region_psum`` /
+    ``region_gather``, or the ``tp_psum`` / ``tp_gather`` plan helpers),
+    with ``region_gather`` at EVERY replicated->sharded input — weights
+    included — so every parameter cotangent comes out exact per shard and
+    the only remaining reduction is the batch one below.  The repo's model
+    layers gather activations only (sufficient for ``pipeline_apply``),
+    so a TP-planned *model* stage body must use ``pipeline_apply``, not
+    this executor — see the scope note in ``repro.dist.tp``.
 
     ``stage_fn`` must be the plain (no-aux) form.  Returns
     ``(y, dstage_params, dx)``; ``dstage_params`` has the leading stage
@@ -444,16 +475,22 @@ def pipeline_grads(stage_fn: Callable, stage_params: Any, x: jax.Array,
         if batch_axes:
             # every data shard back-propagated only its batch slice; the
             # parameter cotangent is the sum over shards (y/dx keep their
-            # batch sharding and need no reduction)
+            # batch sharding, and the f/g contract makes every leaf's grad
+            # exact per TP shard, so no TP reduction exists here)
             dparams = jax.tree.map(
                 lambda p: jax.lax.psum(p, tuple(batch_axes)), dparams)
         dparams = jax.tree.map(lambda p: p[None], dparams)
         return y, dparams, dx
 
     from repro.dist.sharding import suppress_rules
+    from repro.dist.tp import explicit_vjp_psums
     bspec = P(None, tuple(batch_axes)) if batch_axes else P()
-    with suppress_rules():  # shard() must no-op inside the manual region
+    pspec = param_specs if param_specs is not None else P(axis_name)
+    # this executor hand-rolls its backward (jax.vjp per tick) with
+    # replicated cotangents, so TP collectives in the stage body must be
+    # the custom-vjp f/g pair, not raw psum — see repro.dist.tp
+    with suppress_rules(), explicit_vjp_psums():
         return shard_map(per_stage, mesh=mesh,
-                         in_specs=(P(axis_name), bspec, bspec),
-                         out_specs=(bspec, P(axis_name), bspec),
+                         in_specs=(pspec, bspec, bspec),
+                         out_specs=(bspec, pspec, bspec),
                          check_rep=False)(stage_params, x, gy)

@@ -295,14 +295,19 @@ def pipeline_rules() -> Rules:
     dimension (logical name "stack") shards over the "stage" mesh axis, so
     each stage device holds exactly its contiguous block of layers at rest
     — ``stack_stages`` inside the pipelined train step is then a local
-    reshape, and ``pipeline_apply``'s ``P("stage")`` in_spec moves no layer
-    weights between stages.  The stage-awareness is deliberately *just a
-    rule*: ``partition_spec``'s divisibility fallback keeps non-divisible
-    stacks (e.g. a 1-layer dense prologue, or scan-group stacks of the
-    non-decoder families) replicated over "stage" instead of erroring, and
-    on stage-less meshes the mesh-presence fallback makes this preset
-    degrade to exactly ``train_rules``.  The AdamW moments inherit the
-    stage sharding through ``opt_state_axes``.
+    reshape that moves no layer weights between stages.  The "model"-axis
+    rules ("ffn"/"heads"/"kv_heads"/"experts") are honoured on BOTH sides
+    of the pipeline's manual region: outside it by the auto partitioner,
+    inside it by ``repro.dist.tp`` — ``stage_param_specs`` carries the
+    same TP dims sharded across the ``shard_map`` boundary and the stage
+    bodies run on local shards with manual psums, so entering the pipe
+    gathers only the ZeRO "d_model"/"data" dims.  The stage-awareness is
+    deliberately *just a rule*: ``partition_spec``'s divisibility fallback
+    keeps non-divisible stacks (e.g. a 1-layer dense prologue, or
+    scan-group stacks of the non-decoder families) replicated over "stage"
+    instead of erroring, and on stage-less meshes the mesh-presence
+    fallback makes this preset degrade to exactly ``train_rules``.  The
+    AdamW moments inherit the stage sharding through ``opt_state_axes``.
     """
     rules = train_rules()
     rules["stack"] = "stage"

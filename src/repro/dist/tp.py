@@ -1,0 +1,340 @@
+"""Tensor parallelism *inside* manual shard_map regions (TP-in-stage).
+
+Outside the pipeline, tensor parallelism is the auto partitioner's job:
+``pipeline_rules()`` shards the contraction-orthogonal weight dims over
+"model" and GSPMD inserts the all-reduces.  Inside the pipeline's manual
+``shard_map`` region the partitioner is switched off, so this module is
+the manual mirror of that layout:
+
+  * :func:`plan_stage_tp` decides, per model config and mesh, which weight
+    dims can shard over the TP axes (Megatron column/row parallelism needs
+    *head-aligned* splits — raw divisibility of the flattened ``h * d``
+    columns is not enough, so this is a plan, not a PartitionSpec
+    fallback);
+  * :func:`stage_param_specs` turns that plan into per-leaf
+    ``PartitionSpec``s for the stage-stacked parameter pytree, so stage
+    weights enter ``pipeline_apply`` / ``pipeline_grads`` sharded over
+    ("stage",) + TP axes **at rest** — the per-step boundary gather that
+    remains is the ZeRO d_model/"data" gather only, 1/tp of the old bytes;
+  * :func:`use_stage_tp` installs the plan as an ambient context that the
+    model layers consult: attention / MLP / MoE run on their local weight
+    shards and insert a plain ``lax.psum`` after the out-projections
+    (row-parallel reduction), exactly mirroring what the auto partitioner
+    emits for the same rules outside the pipe.
+
+The collectives come in two transposition regimes, selected by how the
+surrounding executor differentiates:
+
+  * **global AD** (``pipeline_apply`` + ``jax.grad``, the production
+    path): plain ``lax.psum`` is exactly right.  shard_map's boundary
+    rules mask output cotangents to index 0 of every unmentioned mesh
+    axis and psum input cotangents over unmentioned axes; ``psum``'s
+    transpose (``psum`` again) re-broadcasts the masked cotangent, and
+    the boundary psum implements the Megatron "g" operator — summing the
+    per-shard partial cotangents of column-parallel inputs and of
+    replicated params (norm gammas) applied to sharded activations — for
+    free.  ``tests/test_tp.py`` pins all of this.
+  * **hand-rolled VJPs** (``pipeline_grads``' per-tick ``jax.vjp``):
+    cotangents there are *replicated*, never boundary-masked, so raw
+    ``psum`` would double-count (its transpose sums the already-exact
+    replicated cotangent over the group).  Under
+    :func:`explicit_vjp_psums` the helpers emit the classic Megatron
+    custom-vjp pair instead — "f" (fwd all-reduce, bwd identity) at the
+    row-parallel outputs and "g" (fwd identity, bwd all-reduce) where
+    replicated activations enter column-parallel compute.
+
+Model code only ever calls :func:`tp_psum` / :func:`tp_gather`; the mode
+flag routes to the right primitive.  Scope note: the model layers place
+gathers on *activations* only, which is complete for the production
+``pipeline_apply`` + ``jax.grad`` path (the boundary reduces replicated
+weight leaves).  The hand-rolled ``pipeline_grads`` executor additionally
+requires ``region_gather`` on every replicated *weight* consumed inside
+sharded compute (grouped-kv wk/wv, qk-norm gammas, the router's combine
+path) — the model layers do not do that, so a TP-planned model stage body
+is only supported through ``pipeline_apply``; ``pipeline_grads`` + TP is
+for stage bodies written to the full f/g contract (see its docstring and
+``tests/test_tp.py``'s toy).
+
+Like the rest of ``repro.dist``, importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+#: kv sharding modes for GQA under head-parallel attention
+KV_SHARD, KV_GROUP, KV_NONE = "shard", "group", "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class StageTPPlan:
+    """What actually shards over the TP axes inside one pipeline stage.
+
+    Every flag is a *joint* decision between the weight layout
+    (``stage_param_specs``) and the runtime compute (the layers' manual
+    psums): the two must agree, which is why the plan — not generic
+    divisibility of flattened dims — is the single source of truth.
+
+    ``kv_mode`` for GQA attention:
+      * ``"shard"``  — kv_heads % tp == 0: wk/wv shard like wq;
+      * ``"group"``  — kv_heads < tp but tp % kv_heads == 0 (e.g. qwen2-72b,
+        8 kv heads on a 16-way model axis): wk/wv stay replicated, every
+        device computes the (small) full k/v and slices the one kv head its
+        local q-head block maps to;
+      * ``"none"``   — no head-aligned split exists; attention replicates
+        (MoE/MLP TP still applies).
+    """
+    axes: Tuple[str, ...]
+    sizes: Tuple[int, ...]
+    shard_heads: bool
+    kv_mode: str
+    shard_ffn: bool
+    shard_experts: bool
+    shard_shared: bool
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.sizes:
+            n *= s
+        return n
+
+
+def plan_stage_tp(cfg: ModelConfig, mesh: Mesh,
+                  axes: Tuple[str, ...] = ("model",)
+                  ) -> Optional[StageTPPlan]:
+    """TP plan for ``cfg``'s decoder layers on ``mesh``, or None.
+
+    ``axes`` are filtered to axes present on the mesh with size > 1 (the
+    same mesh-presence degradation as the rules engine); None means the
+    stage bodies run fully replicated over the model axis, i.e. exactly
+    the pre-TP behaviour.
+    """
+    sizes = dict(mesh.shape)
+    present = tuple(a for a in axes if sizes.get(a, 1) > 1)
+    if not present:
+        return None
+    tp = 1
+    for a in present:
+        tp *= sizes[a]
+    shard_heads = cfg.num_heads % tp == 0
+    if cfg.attention_type == "mla" or not shard_heads:
+        kv_mode = KV_NONE
+    elif cfg.num_kv_heads % tp == 0:
+        kv_mode = KV_SHARD
+    elif tp % cfg.num_kv_heads == 0:
+        # each kv head serves tp/kv_heads devices; a device's contiguous
+        # q-head block (num_heads/tp heads) then lies inside ONE kv group,
+        # so the grouped slice in gqa_apply is well defined
+        kv_mode = KV_GROUP
+    else:
+        shard_heads = False  # no head-aligned split of q vs kv exists
+        kv_mode = KV_NONE
+    sdff = cfg.moe_d_ff * cfg.num_shared_experts
+    return StageTPPlan(
+        axes=present,
+        sizes=tuple(sizes[a] for a in present),
+        shard_heads=shard_heads,
+        kv_mode=kv_mode,
+        shard_ffn=cfg.d_ff % tp == 0,
+        shard_experts=cfg.num_experts > 0 and cfg.num_experts % tp == 0,
+        shard_shared=sdff > 0 and sdff % tp == 0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Ambient plan context (consulted by the model layers)
+# ---------------------------------------------------------------------------
+
+_LOCAL = threading.local()
+
+
+def current_tp() -> Optional[StageTPPlan]:
+    """The active plan, or None outside any ``use_stage_tp`` region."""
+    return getattr(_LOCAL, "plan", None)
+
+
+@contextlib.contextmanager
+def use_stage_tp(plan: Optional[StageTPPlan]):
+    """Install ``plan`` while the stage body traces (None = no TP).
+
+    Wrapped around the stage_fn *body* by ``DecoderModel.pipeline_loss``,
+    so the context is active exactly while the manual region traces —
+    including the re-traces ``jax.vjp`` performs in ``pipeline_grads``.
+    Thread-local and nesting, like ``repro.dist.sharding.use_rules``.
+    """
+    prev = current_tp()
+    _LOCAL.plan = plan
+    try:
+        yield plan
+    finally:
+        _LOCAL.plan = prev
+
+
+# ---------------------------------------------------------------------------
+# Collectives, in both transposition regimes (see module docstring)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _allreduce_f(x, axes):
+    """Megatron "f": forward all-reduce, backward identity."""
+    return jax.lax.psum(x, axes)
+
+
+def _allreduce_f_fwd(x, axes):
+    return _allreduce_f(x, axes), None
+
+
+def _allreduce_f_bwd(axes, _, g):
+    return (g,)
+
+
+_allreduce_f.defvjp(_allreduce_f_fwd, _allreduce_f_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _allreduce_g(x, axes):
+    """Megatron "g": forward identity, backward all-reduce."""
+    return x
+
+
+def _allreduce_g_fwd(x, axes):
+    return x, None
+
+
+def _allreduce_g_bwd(axes, _, g):
+    return (jax.lax.psum(g, axes),)
+
+
+_allreduce_g.defvjp(_allreduce_g_fwd, _allreduce_g_bwd)
+
+
+def _explicit_vjp() -> bool:
+    return getattr(_LOCAL, "explicit_vjp", False)
+
+
+@contextlib.contextmanager
+def explicit_vjp_psums():
+    """Route :func:`region_psum` / :func:`region_gather` to the custom-vjp
+    f/g pair while tracing a stage body whose backward is a hand-rolled
+    ``jax.vjp`` with replicated cotangents (``pipeline_grads``).  Never
+    needed on the ``pipeline_apply`` + ``jax.grad`` path, where plain
+    ``psum`` + shard_map's boundary rules are the correct pair."""
+    prev = _explicit_vjp()
+    _LOCAL.explicit_vjp = True
+    try:
+        yield
+    finally:
+        _LOCAL.explicit_vjp = prev
+
+
+def region_psum(x: jax.Array, axes: Tuple[str, ...]) -> jax.Array:
+    """Row-parallel output reduction inside a manual region."""
+    axes = tuple(axes)
+    if _explicit_vjp():
+        return _allreduce_f(x, axes)
+    return jax.lax.psum(x, axes)
+
+
+def region_gather(x: jax.Array, axes: Tuple[str, ...]) -> jax.Array:
+    """Column-parallel input marker inside a manual region: identity in
+    forward; in explicit-vjp mode its backward sums the per-shard partial
+    cotangents (under global AD the shard_map boundary does that)."""
+    if _explicit_vjp():
+        return _allreduce_g(x, tuple(axes))
+    return x
+
+
+def tp_psum(x: jax.Array, plan: Optional[StageTPPlan] = None) -> jax.Array:
+    """All-reduce over the TP axes — the row-parallel output reduction.
+    No-op when no plan is active."""
+    plan = plan or current_tp()
+    if plan is None:
+        return x
+    return region_psum(x, plan.axes)
+
+
+def tp_gather(x: jax.Array, plan: Optional[StageTPPlan] = None) -> jax.Array:
+    """Mark ``x`` (replicated) as the input of column-parallel compute.
+    No-op when no plan is active; see :func:`region_gather`."""
+    plan = plan or current_tp()
+    if plan is None:
+        return x
+    return region_gather(x, plan.axes)
+
+
+def tp_index(plan: StageTPPlan) -> jax.Array:
+    """This device's linear index within the TP group (row-major over
+    ``plan.axes``) — traced; only meaningful inside the manual region."""
+    idx = jax.numpy.int32(0)
+    for a, s in zip(plan.axes, plan.sizes):
+        idx = idx * s + jax.lax.axis_index(a)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# At-rest specs for the stage-stacked parameter pytree
+# ---------------------------------------------------------------------------
+
+def _map_axis(plan: StageTPPlan, name: Optional[str], used: set,
+              *, shard: bool):
+    if not shard or name is None:
+        return None
+    if set(plan.axes) & used:
+        return None  # each mesh axis at most once per spec
+    used.update(plan.axes)
+    return plan.axes if len(plan.axes) > 1 else plan.axes[0]
+
+
+def _leaf_spec(plan: StageTPPlan, key: str, ax: Tuple[Optional[str], ...],
+               axis_name: str, in_moe: bool) -> P:
+    assert ax and ax[0] == "stack", (key, ax)
+    entries: list = [axis_name, None]  # (S, L_per, ...) leading dims
+    used: set = set()
+    for name in ax[1:]:
+        if in_moe:
+            if key == "router":
+                shard = False  # routing needs every expert's logits locally
+            elif key.startswith("shared_"):
+                shard = name == "ffn" and plan.shard_shared
+            else:
+                shard = name == "experts" and plan.shard_experts
+        else:
+            shard = ((name == "heads" and plan.shard_heads)
+                     or (name == "kv_heads" and plan.kv_mode == KV_SHARD)
+                     or (name == "ffn" and plan.shard_ffn))
+        entries.append(_map_axis(plan, name, used, shard=shard))
+    return P(*entries)
+
+
+def stage_param_specs(plan: StageTPPlan, axes: Any,
+                      axis_name: str = "stage") -> Any:
+    """Per-leaf PartitionSpecs for a stage-stacked layer-parameter pytree.
+
+    ``axes`` is the *unstacked* logical-axes tree of the layer stack (each
+    leaf a tuple starting with "stack", as produced by
+    ``repro.models.params.axes_tree(schema)["layers"]``); the result
+    matches the ``stack_stages``-stacked tree, whose leaves carry two
+    leading dims (S, L_per).  These specs are what keeps the TP dims
+    sharded across the ``shard_map`` boundary — the manual region's
+    at-rest layout — while the "data"-axis (ZeRO d_model) dims gather at
+    the boundary exactly as the auto partitioner does per layer outside
+    the pipe.
+    """
+    def walk(node: Any, key: str, in_moe: bool):
+        if isinstance(node, dict):
+            return {k: walk(v, k, in_moe or k == "moe") for k, v in
+                    node.items()}
+        return _leaf_spec(plan, key, tuple(node), axis_name, in_moe)
+
+    return walk(axes, "", False)

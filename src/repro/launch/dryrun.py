@@ -170,8 +170,23 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             dp_shards = 1
             for a in _batch_dp_axes(mesh, rules, shape.global_batch):
                 dp_shards *= mesh_axis_size(mesh, a)
-            plan = TrainPlan.for_shape(cfg, shape, dp_shards,
-                                       pipeline_stages=pipeline_stages or 1)
+            # TrainPlan's transient-stage-weight charge must reflect what
+            # plan_stage_tp will ACTUALLY shard inside the region: a config
+            # whose dims don't divide the model axis keeps its stage
+            # weights fully gathered, so charging 1/tp would underestimate
+            # the footprint 16x and pick an M that OOMs.  Require the
+            # dominant weight dims (ffn/experts, plus heads) to shard.
+            tp_shards = 1
+            if pipeline_stages:
+                from repro.dist import tp as _tp
+                tplan = _tp.plan_stage_tp(cfg, mesh)
+                if (tplan is not None and tplan.shard_heads
+                        and (tplan.shard_ffn or tplan.shard_experts)):
+                    tp_shards = tplan.size
+            plan = TrainPlan.for_shape(
+                cfg, shape, dp_shards,
+                pipeline_stages=pipeline_stages or 1,
+                tp_shards=tp_shards)
             step = make_train_step(model, opt_cfg, plan,
                                    mesh=mesh if pipeline_stages else None)
             jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
@@ -264,22 +279,19 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     # ``plan.accum_steps`` below.
     dd = mesh_axis_size(mesh, "data")
     mm = mesh_axis_size(mesh, "model")
+    stages = mesh_axis_size(mesh, "stage") if pipeline_stages else 1
     if pipeline_stages:
-        # fold the stage axis into the analytic model axis: a
-        # 1/(S*data*model) layer-block slice per chip.  This is the
-        # TARGET pipelined layout, not the lowered program: today's
-        # pipeline_apply gathers each stage's weights over data/model and
-        # replicates the stage compute across "model" (ROADMAP: TP inside
-        # stage bodies), so the compiled step does ~model-axis-times the
-        # per-chip compute these terms assume — the record is stamped
-        # ``roofline_layout`` so nobody mistakes it for the compiled
-        # truth (xla_raw is).  TP-collective volume is also overestimated
-        # (the analytic TP group conflates the stage axis with TP); the
-        # bubble factor below is carried by ``pipeline_bubble``.
-        mm *= mesh_axis_size(mesh, "stage")
+        # composed (stage, data, model) layout: since TP runs inside the
+        # stage bodies (repro.dist.tp), the lowered step really does
+        # execute a 1/(S*data*model) layer-block slice per chip — the
+        # analytic MeshSpec carries the stage axis explicitly so weight
+        # sharding uses model*stage while the TP collective group stays
+        # the model axis, matching the compiled program (xla_raw remains
+        # the cross-check).  The bubble factor is carried by
+        # ``pipeline_bubble``.
         record["roofline_layout"] = (
-            "target: stage-block sharding incl. TP inside stages "
-            "(lowered step still replicates stage compute over 'model')")
+            "composed: stage-block sharding with TP inside the stage "
+            "bodies (matches the lowered step)")
     if rules_preset == "dp_only":
         # weights replicate, so only batch DP matters — count the mesh
         # axes that actually divide the batch (fallback may drop some)
@@ -288,7 +300,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             if a != "pod":
                 dd *= mesh_axis_size(mesh, a)
         mm = 1
-    mesh_spec = MeshSpec(pod=2 if multi_pod else 1, data=dd, model=mm)
+    mesh_spec = MeshSpec(pod=2 if multi_pod else 1, data=dd, model=mm,
+                         stage=stages)
     accum = 1
     moment_bytes = 4
     if shape.kind == "train":

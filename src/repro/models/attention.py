@@ -195,13 +195,26 @@ def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
        * decode: x is (B, 1, D); cache holds the past
        * cross attention: cross_kv supplies (k, v) precomputed; no cache.
     """
+    from repro.dist import tp as mtp
     b, sq, _ = x.shape
     h, kh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     mode = cfg.matmul_mode
-    q = dense(x, p["wq"], mode, p.get("bq")).reshape(b, sq, h, d)
+    # manual TP (inside a pipeline stage, train path only): wq/wo — and in
+    # "shard" kv_mode wk/wv — hold this device's head slice; head counts
+    # come from the local weight shapes so the same code runs sharded and
+    # replicated.  wo's output is then a partial sum -> psum at the end.
+    tpc = mtp.current_tp()
+    tp_attn = (tpc is not None and tpc.shard_heads and cross_kv is None
+               and cache is None)
+    if tp_attn:
+        # column-parallel input marker for the q (and, sharded or grouped,
+        # kv) projection paths — identity fwd, see repro.dist.tp
+        x = mtp.tp_gather(x, tpc)
+    q = dense(x, p["wq"], mode, p.get("bq")).reshape(b, sq, -1, d)
+    h_loc = q.shape[2]
     if cross_kv is None:
-        k = dense(x, p["wk"], mode, p.get("bk")).reshape(b, sq, kh, d)
-        v = dense(x, p["wv"], mode, p.get("bv")).reshape(b, sq, kh, d)
+        k = dense(x, p["wk"], mode, p.get("bk")).reshape(b, sq, -1, d)
+        v = dense(x, p["wv"], mode, p.get("bv")).reshape(b, sq, -1, d)
     else:
         k, v = cross_kv
     if cfg.qk_norm:
@@ -243,10 +256,20 @@ def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
         kv_pos = (q_pos if cross_kv is None else
                   jnp.broadcast_to(jnp.arange(k.shape[1])[None], (b, k.shape[1])))
 
+    if tp_attn and tpc.kv_mode == mtp.KV_GROUP:
+        # kv_heads < tp: wk/wv are replicated (the full k/v is cheap) and
+        # each device slices the one kv head its contiguous q-head block
+        # maps to — tp % kv_heads == 0 guarantees the block stays inside a
+        # single kv group (plan_stage_tp)
+        kvh = (mtp.tp_index(tpc) * h_loc) // (h // kh)
+        k_all = jax.lax.dynamic_slice_in_dim(k_all, kvh, 1, axis=2)
+        v_all = jax.lax.dynamic_slice_in_dim(v_all, kvh, 1, axis=2)
     out = sdpa(q, k_all, v_all, q_pos, kv_pos, causal=causal and cross_kv is None,
                window=window, prefix_len=prefix_len, chunk=cfg.attn_chunk,
                softcap=cfg.logit_softcap)
-    out = dense(out.reshape(b, sq, h * d).astype(x.dtype), p["wo"], mode)
+    out = dense(out.reshape(b, sq, h_loc * d).astype(x.dtype), p["wo"], mode)
+    if tp_attn:
+        out = mtp.tp_psum(out, tpc)
     return out, new_cache
 
 
@@ -276,17 +299,22 @@ def mla_defs(cfg: ModelConfig, dtype=jnp.bfloat16):
     return defs
 
 
-def _mla_q(p, cfg, x):
+def _mla_q(p, cfg, x, tp_attn=False):
+    from repro.dist import tp as mtp
     b, s, _ = x.shape
-    h = cfg.num_heads
     qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
     mode = cfg.matmul_mode
     if cfg.q_lora_rank:
+        # wdq/q_norm are replicated (computed redundantly per TP shard);
+        # the gather marks where the latent enters head-sharded compute
         ql = rms_norm(dense(x, p["wdq"], mode), p["q_norm"], cfg.norm_eps)
+        if tp_attn:
+            ql = mtp.tp_gather(ql)
         q = dense(ql, p["wuq"], mode)
     else:
-        q = dense(x, p["wq"], mode)
-    q = q.reshape(b, s, h, qk)
+        q = dense(mtp.tp_gather(x) if tp_attn else x, p["wq"], mode)
+    # head count from the (possibly TP-sharded) up-projection shape
+    q = q.reshape(b, s, -1, qk)
     return (q[..., : cfg.qk_nope_head_dim],
             q[..., cfg.qk_nope_head_dim:])        # (nope, rope)
 
@@ -296,10 +324,17 @@ def mla_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
     """MLA attention.  Prefill/train expands K/V from the latent; decode
     uses the absorbed formulation (scores in the kv_lora latent space), so
     the per-step cost is O(S * kv_lora) instead of O(S * H * head_dim)."""
+    from repro.dist import tp as mtp
     b, sq, _ = x.shape
-    h = cfg.num_heads
     mode = cfg.matmul_mode
-    q_nope, q_rope = _mla_q(p, cfg, x)
+    # manual TP (pipeline stage, train path): the latent projections
+    # (wdq/wdkv) are replicated — every device computes the small shared
+    # latent — while wuq/wuk/wuv/wo hold local head slices; wo's output is
+    # a partial sum over heads -> psum.  The absorbed decode path never
+    # runs under a TP context (pipelining is train-only).
+    tpc = mtp.current_tp()
+    tp_attn = tpc is not None and tpc.shard_heads and cache is None
+    q_nope, q_rope = _mla_q(p, cfg, x, tp_attn=tp_attn)
     dkv = dense(x, p["wdkv"], mode)
     ckv = rms_norm(dkv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     krope = dkv[..., cfg.kv_lora_rank:]           # (B, S, rope_dim)
@@ -337,6 +372,11 @@ def mla_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
         else:
             ckv_e = ckv.astype(jnp.float32)
             kr_e = krope.astype(jnp.float32)
+        if tp_attn:
+            # the shared latents enter head-sharded compute here: the k/v
+            # expansions and (kr broadcast into k) per-head scores
+            ckv_e = mtp.tp_gather(ckv_e, tpc)
+            kr_e = mtp.tp_gather(kr_e, tpc)
         k_nope = jnp.einsum("bsr,rhd->bshd", ckv_e,
                             p["wuk"].astype(jnp.float32))
         v = jnp.einsum("bsr,rhv->bshv", ckv_e,
@@ -356,5 +396,8 @@ def mla_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
                 "krope": cache["krope"].at[:, :sq].set(krope.astype(cache["krope"].dtype)),
                 "pos": cache["pos"].at[:, :sq].set(q_pos),
             }
-    out = out.reshape(b, sq, h * cfg.v_head_dim).astype(x.dtype)
-    return dense(out, p["wo"], mode), new_cache
+    out = out.reshape(b, sq, -1).astype(x.dtype)
+    out = dense(out, p["wo"], mode)
+    if tp_attn:
+        out = mtp.tp_psum(out, tpc)
+    return out, new_cache

@@ -127,12 +127,22 @@ def mlp_defs(d_model: int, d_ff: int, gated: bool, dtype=jnp.bfloat16):
 
 
 def mlp_apply(p, x: jax.Array, act: str, gated: bool, mode: str) -> jax.Array:
+    from repro.dist import tp as mtp
+    # manual TP (inside a pipeline stage): up/gate are column-parallel over
+    # the ffn dim, so `down` is row-parallel and its output a partial sum
+    tpc = mtp.current_tp()
+    tp_on = tpc is not None and tpc.shard_ffn
+    if tp_on:
+        x = mtp.tp_gather(x, tpc)
     up = dense(x, p["up"], mode)
     if gated:
         up = activation(dense(x, p["gate"], mode), act) * up
     else:
         up = activation(up, act)
-    return dense(up, p["down"], mode)
+    out = dense(up, p["down"], mode)
+    if tp_on:
+        out = mtp.tp_psum(out, tpc)
+    return out
 
 
 # ---------------------------------------------------------------------------

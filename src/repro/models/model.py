@@ -210,7 +210,8 @@ class DecoderModel:
         return loss, {"loss": loss, "aux_loss": aux}
 
     def pipeline_loss(self, params, batch, *, num_stages, num_microbatches,
-                      mesh, axis_name="stage", batch_axes=()):
+                      mesh, axis_name="stage", batch_axes=(),
+                      tp_axes=("model",)):
         """Pipelined train loss: equals ``loss`` up to float reassociation.
 
         The scanned decoder stack is split into ``num_stages`` pipeline
@@ -224,12 +225,27 @@ class DecoderModel:
         the ambient rules.  MoE aux losses are computed per pipeline
         microbatch and averaged: the same semantics shift as gradient
         accumulation (dense stacks are unaffected and match exactly).
+
+        Tensor parallelism runs *inside* the stage bodies: per
+        ``repro.dist.tp.plan_stage_tp`` over ``tp_axes`` (filtered to the
+        mesh), stage weights enter the pipeline's manual region sharded
+        over the TP axes at rest — the only boundary gather left is the
+        ZeRO d_model/"data" one — and attention/MLP/MoE run on local
+        shards with manual psums after the out-projections, mirroring
+        what ``pipeline_rules()`` + the auto partitioner produce outside
+        the pipe.  ``tp_axes=()`` disables (fully replicated stage
+        compute, the pre-TP behaviour).
         """
         import numpy as _np
+        from jax.sharding import PartitionSpec as _P
+        from repro.dist import tp as mtp
         from repro.dist.pipeline import (pipeline_apply, stack_stages,
                                          stack_stages_padded)
+        from repro.models.params import axes_tree
         cfg = self.cfg
         assert cfg.num_prefix_tokens == 0, "pipelined path: no prefix tokens"
+        tp_plan = (mtp.plan_stage_tp(cfg, mesh, tuple(tp_axes))
+                   if tp_axes else None)
         M, S = num_microbatches, num_stages
         x = self._embed_in(params, batch)
         b, s, _ = x.shape
@@ -289,15 +305,26 @@ class DecoderModel:
                 x2, a1 = lfn(x, *inp)
                 return (x2, aux + a1), None
 
-            (xm, aux), _ = jax.lax.scan(
-                body, (xm, jnp.float32(0.0)),
-                (stage_p["params"], stage_p["windows"], stage_p["valid"]))
+            # the layers consult the ambient TP plan: sharded projections
+            # plus manual psums after the out-projections
+            with mtp.use_stage_tp(tp_plan):
+                (xm, aux), _ = jax.lax.scan(
+                    body, (xm, jnp.float32(0.0)),
+                    (stage_p["params"], stage_p["windows"], stage_p["valid"]))
             return xm, aux
 
+        if tp_plan is not None:
+            pspecs = {"params": mtp.stage_param_specs(
+                          tp_plan, axes_tree(self.schema())["layers"],
+                          axis_name),
+                      "windows": _P(axis_name), "valid": _P(axis_name)}
+        else:
+            pspecs = None
         xm = x.reshape((M, b // M) + x.shape[1:])
         y, aux_pipe = pipeline_apply(
             stage_fn, {"params": sp, "windows": w_st, "valid": v_st}, xm,
-            mesh, axis_name, batch_axes=batch_axes, with_aux=True)
+            mesh, axis_name, batch_axes=batch_axes, param_specs=pspecs,
+            with_aux=True)
         h = y.reshape(b, s, -1)
         # aux_pipe sums over (microbatch x data-shard) chunks — each data
         # shard computes its own MoE statistics inside the manual region —

@@ -25,14 +25,22 @@ class MeshSpec:
     pod: int
     data: int
     model: int
+    stage: int = 1   # pipeline stages (1 = unpipelined)
 
     @property
     def chips(self) -> int:
-        return self.pod * self.data * self.model
+        return self.pod * self.data * self.model * self.stage
 
     @property
     def dp(self) -> int:  # total data-parallel ways
         return self.pod * self.data
+
+    @property
+    def weight_shards(self) -> int:
+        """TP-orthogonal weight sharding ways: the model axis, times the
+        stage axis when pipelined (each stage holds only its layer block —
+        the TP-in-stage layout the pipelined train step executes)."""
+        return self.model * self.stage
 
 
 SINGLE_POD = MeshSpec(pod=1, data=16, model=16)
@@ -531,6 +539,13 @@ def cell_collective_bytes(cfg: ModelConfig, shape: ShapeConfig,
 
     The knobs (act_bytes, grad_bytes, tp_ar_per_layer) parameterise the
     §Perf hillclimb iterations.
+
+    Pipelined cells (``mesh.stage`` > 1) describe the composed
+    (stage, data, model) layout the stage-aware train step actually
+    compiles: weights shard over model x stage (``weight_shards``), a chip
+    participates in the TP/EP collectives of its own stage's L/stage
+    layers only, and the microbatch hand-offs add a collective-permute
+    term.
     """
     b, s = shape.global_batch, shape.seq_len
     p = param_bytes(cfg)
@@ -538,25 +553,35 @@ def cell_collective_bytes(cfg: ModelConfig, shape: ShapeConfig,
     t = mesh.model
     out: Dict[str, float] = {}
     if shape.kind == "train":
-        # FSDP: params live sharded over data; each microbatch all-gathers
-        # (p/t per chip-group); ring all-gather moves (d-1)/d of the gathered
-        # bytes per chip; twice (fwd + bwd regather).
+        # FSDP: params live sharded over data (on top of the TP/stage
+        # weight sharding); each flush all-gathers the per-chip block; ring
+        # all-gather moves (d-1)/d of the gathered bytes per chip; twice
+        # (fwd + bwd regather).
+        ws = mesh.weight_shards
         if d > 1:
-            out["fsdp_allgather"] = 2 * accum * (p / t) * (d - 1) / d
-            out["grad_reduce"] = 2 * (grad_bytes * p / 2 / t) * (d - 1) / d
+            out["fsdp_allgather"] = 2 * accum * (p / ws) * (d - 1) / d
+            out["grad_reduce"] = 2 * (grad_bytes * p / 2 / ws) * (d - 1) / d
+        layers_local = cfg.num_layers / mesh.stage
         if t > 1:
             tok_local = b * s / d
             act = tok_local * cfg.d_model * act_bytes
-            out["tp_allreduce"] = (cfg.num_layers * tp_ar_per_layer * act *
+            out["tp_allreduce"] = (layers_local * tp_ar_per_layer * act *
                                    2 * (t - 1) / t)
         if cfg.num_experts and t > 1:
             # EP all-to-all: each routed token crosses shards at dispatch
             # and combine, fwd + bwd -> 4x, (t-1)/t stays off-chip
             tok_local = b * s / d
-            moe_layers = cfg.num_layers - cfg.first_dense_layers
+            moe_layers = (cfg.num_layers - cfg.first_dense_layers) \
+                / mesh.stage
             routed = tok_local * cfg.num_experts_per_tok * cfg.d_model * \
                 act_bytes
             out["ep_all_to_all"] = moe_layers * 4 * routed * (t - 1) / t
+        if mesh.stage > 1:
+            # GPipe hand-offs: each microbatch's activation crosses every
+            # stage boundary once fwd + once bwd (collective-permute:
+            # result bytes == wire bytes per chip)
+            tok_local = b * s / d
+            out["pp_permute"] = 2 * tok_local * cfg.d_model * act_bytes
         return {**out, "total": sum(out.values())}
     tok_local = (b * s if shape.kind == "prefill" else b) / max(1, d)
     if shape.kind == "decode" and b < d:

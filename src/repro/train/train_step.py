@@ -47,7 +47,8 @@ class TrainPlan:
                   target_tokens_per_shard: int = 16_384,
                   act_budget_bytes: float = 6e9,
                   seq_shards: int = 1,
-                  pipeline_stages: int = 1) -> "TrainPlan":
+                  pipeline_stages: int = 1,
+                  tp_shards: int = 1) -> "TrainPlan":
         """Pick grad-accumulation so the remat-saved layer inputs
         (num_layers x micro_tokens_local x d_model x 2B / seq_shards) fit in
         ``act_budget_bytes`` of HBM.  ``seq_shards`` > 1 models sequence
@@ -59,12 +60,24 @@ class TrainPlan:
         one pipeline microbatch — plus L/S per-layer remat inputs of the
         microbatch being recomputed, i.e.
 
-            act(M) = (tokens_local / M) * d_model * 2 * (M + S - 1 + L/S).
+            act(M) = (tokens_local / M) * d_model * 2 * (M + S - 1 + L/S),
+
+        and the budget additionally carries the transient per-device stage
+        weights: with TP inside the stage bodies the manual region keeps
+        the head/ffn/expert dims sharded over ``tp_shards`` at rest, so
+        the per-flush ZeRO gather materialises only
+
+            weights = layer_param_bytes * (L / S) / tp_shards
+
+        per device (``tp_shards = 1`` models the old fully-gathered
+        region; per-layer working activations inside a stage shrink by
+        the same 1/tp but are transient and dominated by the terms
+        above).
 
         Preference order: accum = 1 (each accum step is a separate flush,
         so only M amortises the bubble), then the smallest M >= 3(S - 1)
-        (bubble <= 25 %) whose act(M) fits the budget; M grows — and accum
-        after it — until the model fits or the batch runs out.
+        (bubble <= 25 %) whose act(M) + weights fits the budget; M grows —
+        and accum after it — until the model fits or the batch runs out.
         """
         if pipeline_stages <= 1:
             cap = act_budget_bytes * seq_shards / (
@@ -83,6 +96,8 @@ class TrainPlan:
         L = max(1, cfg.num_layers)
         gb = shape.global_batch
         ds = max(1, data_shards)
+        stage_weight_bytes = (_layer_param_bytes(cfg) * (L / S)
+                              / max(1, tp_shards))
 
         def act_bytes(accum: int, m: int) -> float:
             tokens_local = (gb // accum // ds) * shape.seq_len
@@ -104,13 +119,29 @@ class TrainPlan:
             if best is None:   # fallback: least accum, most microbatches
                 best = (accum, (cand or elig)[-1])
             for m in cand:
-                if act_bytes(accum, m) <= act_budget_bytes:
+                if act_bytes(accum, m) + stage_weight_bytes <= act_budget_bytes:
                     return TrainPlan(accum_steps=accum, micro_batch=micro,
                                      pipeline_stages=S,
                                      pipeline_microbatches=m)
         accum, m = best if best else (1, 1)
         return TrainPlan(accum_steps=accum, micro_batch=gb // accum,
                          pipeline_stages=S, pipeline_microbatches=m)
+
+
+def _layer_param_bytes(cfg: ModelConfig) -> float:
+    """bf16 bytes of ONE pipelined-stack layer (attention + MLP/MoE).
+
+    Derived from the model schema itself so the memory model never drifts
+    from the real parameter shapes; used by ``TrainPlan.for_shape`` to
+    charge the transient per-flush stage-weight footprint.
+    """
+    from repro.models import build
+    from repro.models.params import param_count
+    sch = build(cfg).schema()
+    if "layers" not in sch:
+        return 0.0
+    n = max(1, cfg.num_layers - cfg.first_dense_layers)
+    return param_count(sch["layers"]) / n * 2.0
 
 
 def make_train_step(model, opt_cfg: OptimizerConfig, plan: TrainPlan,

@@ -244,8 +244,13 @@ opt = OptimizerConfig(learning_rate=1e-3, warmup_steps=0, total_steps=10)
 M = 4
 
 # qwen2 (dense): (2, 2, 2) stage/data/model mesh; the pipelined loss and
-# grads must match the plain sequential step.  fp32-tolerance yardstick:
-# GSPMD-sharded sequential vs unsharded shows the same grad noise floor.
+# grads must match the plain sequential step — with tensor parallelism
+# ACTIVE inside the stage bodies (pipeline_loss plans TP over "model" by
+# default; assert the plan engaged so this never silently degrades to
+# replicated stage compute).  fp32-tolerance yardstick: the no-TP
+# pipelined path already shows a ~5e-2 grad noise floor vs sequential
+# (bf16 + GSPMD reassociation); TP's manual psums add a little more, and
+# the fp32 block below pins that the TP path itself is EXACT.
 cfg = get_config("qwen2_72b", smoke=True)
 model = build(cfg)
 state = init_state(model, jax.random.key(0), opt)
@@ -253,17 +258,38 @@ dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
 batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, 0).items()}
 mesh = make_host_mesh(model=2, stages=2)
 
+from repro.dist import tp as mtp
+plan = mtp.plan_stage_tp(cfg, mesh)
+assert plan is not None and plan.shard_heads and plan.shard_ffn, plan
+assert plan.kv_mode == "shard", plan
+
 def pipe_loss(params, b):
     return model.pipeline_loss(params, b, num_stages=2, num_microbatches=M,
                                mesh=mesh, batch_axes=("data",))
+
+def pipe_loss_notp(params, b):
+    return model.pipeline_loss(params, b, num_stages=2, num_microbatches=M,
+                               mesh=mesh, batch_axes=("data",), tp_axes=())
 
 with shd.use_rules(mesh, shd.pipeline_rules()):
     l_p, g_p = grads_of(pipe_loss, state["params"], batch)
 l_s, g_s = grads_of(lambda p, b: model.loss(p, b), state["params"], batch)
 rel = max_rel_err(g_p, g_s)
 print("QWEN", l_p, l_s, rel)
-assert abs(l_p - l_s) < 1e-4, (l_p, l_s)
-assert rel < 5e-2, rel
+assert abs(l_p - l_s) < 1e-3, (l_p, l_s)
+assert rel < 6e-2, rel
+
+# fp32 exactness: with reassociation noise gone, TP-in-stage must agree
+# with the replicated-stage-compute path to float32 precision — this is
+# the correctness pin for the manual psum placement
+params32 = jax.tree.map(lambda p: p.astype(jnp.float32), state["params"])
+with shd.use_rules(mesh, shd.pipeline_rules()):
+    l32_tp, g32_tp = grads_of(pipe_loss, params32, batch)
+with shd.use_rules(mesh, shd.pipeline_rules()):
+    l32_no, g32_no = grads_of(pipe_loss_notp, params32, batch)
+rel32 = max_rel_err(g32_tp, g32_no)
+print("QWEN_FP32", l32_tp, l32_no, rel32)
+assert abs(l32_tp - l32_no) < 1e-5 and rel32 < 1e-5, (l32_tp, l32_no, rel32)
 
 # deepseek (MoE + MLA + padded 2-layer stack over 2 stages): data=1 mesh so
 # the MoE batch statistics (capacity, aux) see the same token partition as
@@ -275,6 +301,11 @@ state = init_state(model, jax.random.key(0), opt)
 dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
 batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, 0).items()}
 mesh1 = make_host_mesh(model=4, stages=2)   # (2, 1, 4)
+
+# MLA heads, the 160->8 smoke experts, and the shared ffn all shard 4 ways
+plan1 = mtp.plan_stage_tp(cfg, mesh1)
+assert (plan1 is not None and plan1.shard_heads and plan1.shard_experts
+        and plan1.shard_shared), plan1
 
 def pipe_loss_ds(params, b):
     return model.pipeline_loss(params, b, num_stages=2, num_microbatches=M,
@@ -294,8 +325,22 @@ with shd.use_rules(mesh1, shd.pipeline_rules()):
 l_s, g_s = grads_of(seqM_loss, state["params"], batch)
 rel = max_rel_err(g_p, g_s)
 print("DEEPSEEK", l_p, l_s, rel)
-assert abs(l_p - l_s) < 1e-3, (l_p, l_s)
-assert rel < 5e-2, rel
+assert abs(l_p - l_s) < 3e-3, (l_p, l_s)
+assert rel < 6e-2, rel
+
+# fp32 exactness for the MoE/MLA TP path (expert-parallel dispatch,
+# latent->head gathers, shared-ffn split): TP vs replicated stage compute
+params32 = jax.tree.map(lambda p: p.astype(jnp.float32), state["params"])
+def pipe_loss_ds_notp(params, b):
+    return model.pipeline_loss(params, b, num_stages=2, num_microbatches=M,
+                               mesh=mesh1, batch_axes=("data",), tp_axes=())
+with shd.use_rules(mesh1, shd.pipeline_rules()):
+    l32_tp, g32_tp = grads_of(pipe_loss_ds, params32, batch)
+with shd.use_rules(mesh1, shd.pipeline_rules()):
+    l32_no, g32_no = grads_of(pipe_loss_ds_notp, params32, batch)
+rel32 = max_rel_err(g32_tp, g32_no)
+print("DEEPSEEK_FP32", l32_tp, l32_no, rel32)
+assert abs(l32_tp - l32_no) < 1e-5 and rel32 < 1e-5, (l32_tp, l32_no, rel32)
 print("TRAIN_MATCH")
 """
 

@@ -1,0 +1,67 @@
+"""The dry-run results integrity gate (scripts/check_results.py).
+
+The committed results file must pass the same gate CI runs, and the gate
+itself must actually catch the violation classes it claims to: missing
+schema fields, duplicate cell keys (stage axis included), and the
+resurrected ``roofline_layout: target`` stamp on pipelined cells.
+"""
+import copy
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(ROOT, "scripts"))
+
+from check_results import EXPECTED_PIPELINED, check  # noqa: E402
+
+
+def _load():
+    with open(os.path.join(ROOT, "results", "dryrun.json")) as f:
+        return json.load(f)
+
+
+def test_committed_results_pass_gate():
+    assert check(_load()) == []
+
+
+def test_committed_pipelined_cells_complete():
+    recs = _load()
+    pp = {(r["arch"], r["shape"], r["mesh"]) for r in recs
+          if r.get("pipeline_stages") and r.get("status") == "ok"}
+    assert EXPECTED_PIPELINED <= pp
+
+
+def test_gate_catches_target_stamp():
+    recs = _load()
+    bad = copy.deepcopy(recs)
+    for r in bad:
+        if r.get("pipeline_stages") and r.get("status") == "ok":
+            r["roofline_layout"] = ("target: stage-block sharding incl. "
+                                    "TP inside stages")
+    errs = check(bad)
+    assert any("'target' stamp" in e for e in errs), errs
+
+
+def test_gate_catches_duplicate_cell_key():
+    recs = _load()
+    bad = recs + [copy.deepcopy(recs[0])]
+    errs = check(bad)
+    assert any("duplicate cell_key" in e for e in errs), errs
+
+
+def test_gate_catches_missing_fields():
+    recs = _load()
+    bad = copy.deepcopy(recs)
+    ok = next(r for r in bad if r.get("status") == "ok")
+    ok.pop("xla_raw")
+    ok.pop("rules", None)
+    errs = check(bad)
+    assert any("missing 'rules'" in e for e in errs), errs
+    assert any("'xla_raw'" in e for e in errs), errs
+
+
+def test_gate_catches_missing_canonical_pipelined_cell():
+    recs = [r for r in _load() if not r.get("pipeline_stages")]
+    errs = check(recs)
+    assert any("missing canonical pipelined cell" in e for e in errs), errs
