@@ -94,6 +94,86 @@ def engine_workload_table(fast: bool = False,
     return rows, out
 
 
+def engine_overlap_table(fast: bool = False,
+                         shapes: Tuple[str, ...] = ("prefill_32k",
+                                                    "decode_32k"),
+                         ) -> Tuple[List[str], Dict[str, Dict[str, float]]]:
+    """Double-buffered vs serial reprogramming, per model (22 nm).
+
+    Shows what the shadow weight plane buys at workload level: exposed
+    stalls drop from the full program time to max(0, program − compute)
+    per round, so reprogram-bound cells (small-batch decode) speed up
+    while compute-bound cells (prefill) are unchanged — energy identical
+    by construction.
+    """
+    from repro.configs import ARCH_IDS, SHAPES, get_config
+    from repro.sim import EngineConfig, map_model
+    archs = ARCH_IDS[:3] if fast else ARCH_IDS
+    ser = EngineConfig(technology_nm=22)
+    db = EngineConfig(technology_nm=22, double_buffered=True)
+    rows: List[str] = []
+    out: Dict[str, Dict[str, float]] = {}
+    for arch in archs:
+        cfg = get_config(arch)
+        for sname in shapes:
+            ws = map_model(cfg, SHAPES[sname], ser)
+            wd = map_model(cfg, SHAPES[sname], db)
+            speed = ws.total_cycles / wd.total_cycles if wd.total_cycles \
+                else 1.0
+            stall_frac = (ws.reprogram_cycles / ws.total_cycles
+                          if ws.total_cycles else 0.0)
+            key = f"{arch}/{sname}"
+            out[key] = {
+                "util_serial": ws.utilization,
+                "util_overlap": wd.utilization,
+                "serial_stall_frac": stall_frac,
+                "exposed_stall_frac": (wd.reprogram_cycles / wd.total_cycles
+                                       if wd.total_cycles else 0.0),
+                "wallclock_speedup": speed,
+            }
+            rows.append(
+                f"engine_overlap_{arch}_{sname},"
+                f"util={ws.utilization:.3f}->{wd.utilization:.3f},"
+                f"stall={stall_frac * 100:.1f}%_speedup={speed:.2f}x")
+    return rows, out
+
+
+def engine_scaleout_table(fast: bool = False,
+                          engines: Tuple[int, ...] = (1, 2, 4, 8, 16),
+                          sname: str = "decode_32k",
+                          ) -> Tuple[List[str], Dict[str, Dict[int, Dict[str, float]]]]:
+    """1 → E engine sweep (repro.sim.scaleout), decode shape, 22 nm.
+
+    Per cluster size: achieved TOPS/W, GOPS/mm², utilization and the
+    scaling efficiency vs one engine (monotone non-increasing on this
+    doubling sweep; == 1.0 at E = 1).
+    """
+    from repro.configs import ARCH_IDS, SHAPES, get_config
+    from repro.roofline.model import matmul_inventory
+    from repro.sim import EngineConfig, scaling_curve
+    archs = ARCH_IDS[:2] if fast else ARCH_IDS[:6]
+    eng = EngineConfig(technology_nm=22, double_buffered=True)
+    rows: List[str] = []
+    out: Dict[str, Dict[int, Dict[str, float]]] = {}
+    for arch in archs:
+        cfg = get_config(arch)
+        inv = matmul_inventory(cfg, SHAPES[sname])
+        out[arch] = {}
+        for E, rep in scaling_curve(inv, eng, engines=engines):
+            out[arch][E] = {
+                "tops_w": rep.achieved_tops_per_watt,
+                "gops_mm2": rep.gops_per_mm2,
+                "utilization": rep.utilization,
+                "scaling_eff": rep.scaling_efficiency,
+            }
+            rows.append(
+                f"engine_scaleout_{arch}_{sname}_E{E},"
+                f"tops_w={rep.achieved_tops_per_watt:.2f},"
+                f"eff={rep.scaling_efficiency:.3f}"
+                f"_util={rep.utilization:.3f}")
+    return rows, out
+
+
 def lm_workload_energy(arch: str = "gemma3_12b") -> Tuple[List[str], Dict[str, float]]:
     """Beyond-paper: project the OISMA 1MB engine's energy for one LM
     decode token vs an equivalent-count bf16 MAC budget on TPU v5e.

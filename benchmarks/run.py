@@ -36,7 +36,9 @@ def main() -> None:
     for rows, _ in (hardware.table2_energy(), hardware.table3_comparison(),
                     hardware.lm_workload_energy(),
                     hardware.engine_validation_table(),
-                    hardware.engine_workload_table(fast=args.fast)):
+                    hardware.engine_workload_table(fast=args.fast),
+                    hardware.engine_overlap_table(fast=args.fast),
+                    hardware.engine_scaleout_table(fast=args.fast)):
         for r in rows:
             print(r)
     rows, _ = kernels_bench.bp_matmul_impls(128 if args.fast else 256)

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Docs integrity gate — run by CI's collect-gate docs-check step.
+
+Checks every markdown link in README.md and docs/*.md:
+
+  1. relative file targets resolve (no dead cross-links between docs);
+  2. fragment targets (``#anchor``, ``file.md#anchor``) match a heading
+     in the target file, using GitHub's heading-slug rules;
+  3. absolute paths and bare URLs without a scheme are rejected (links
+     must be relative so they work on GitHub and in local checkouts).
+
+Exit code 0 = all links resolve; 1 = any violation (all printed).
+
+Usage:  python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+#: [text](target) — excluding images is unnecessary (same resolution rule)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.M)
+_CODE_FENCE_RE = re.compile(r"^```.*?^```[^\S\n]*$", re.M | re.S)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markup (underscores survive — they are
+    word characters on GitHub), lowercase, drop non-word except spaces and
+    hyphens, spaces to hyphens."""
+    heading = re.sub(r"[`*]", "", heading.strip()).lower()
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+def headings(path: pathlib.Path) -> set:
+    text = _CODE_FENCE_RE.sub("", path.read_text())
+    return {github_slug(h) for h in _HEADING_RE.findall(text)}
+
+
+def check_file(path: pathlib.Path) -> list:
+    errors = []
+    text = _CODE_FENCE_RE.sub("", path.read_text())
+    rel = path.relative_to(ROOT)
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("/"):
+            errors.append(f"{rel}: absolute link {target!r} — use a "
+                          f"relative path")
+            continue
+        fname, _, frag = target.partition("#")
+        dest = path if not fname else (path.parent / fname).resolve()
+        try:
+            shown = dest.relative_to(ROOT)
+        except ValueError:  # escapes the repo — still report, don't crash
+            shown = dest
+        if not dest.exists():
+            errors.append(f"{rel}: dead link {target!r} "
+                          f"({shown} does not exist)")
+            continue
+        if frag and dest.suffix == ".md" and frag not in headings(dest):
+            errors.append(f"{rel}: link {target!r} — no heading slugs to "
+                          f"#{frag} in {shown}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for path in DOC_FILES:
+        errors.extend(check_file(path))
+    for e in errors:
+        print(f"FAIL: {e}")
+    if errors:
+        print(f"{len(errors)} dead link(s) across {len(DOC_FILES)} files")
+        return 1
+    print(f"OK: {len(DOC_FILES)} markdown files, all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,7 +14,12 @@ Checks, in order:
      the analytic terms must describe the shipped TP-in-stage layout, not
      an aspirational one;
   5. the canonical pipelined set is present: qwen2-72b and
-     deepseek-v2-236b on train_4k, single and multi mesh.
+     deepseek-v2-236b on train_4k, single and multi mesh;
+  6. every record carrying an analytic roofline also carries the
+     OISMA-engine projection stamp (``roofline.oisma_engine`` —
+     ``repro.roofline.model.oisma_engine_projection``), and the stamp is
+     not an error record: the engine-projected step time must ride along
+     with the chip roofline, never go stale.
 
 Exit code 0 = gate passes; 1 = any violation (all violations printed).
 
@@ -78,6 +83,19 @@ def check(records) -> list:
 
     for cell in sorted(EXPECTED_PIPELINED - pipelined_ok):
         errors.append(f"missing canonical pipelined cell: {cell}")
+
+    for i, r in enumerate(records):
+        rl = r.get("roofline")
+        if not isinstance(rl, dict):
+            continue
+        tag = (f"record[{i}] {r.get('arch')}/{r.get('shape')}/"
+               f"{r.get('mesh')}")
+        oe = rl.get("oisma_engine")
+        if not isinstance(oe, dict):
+            errors.append(f"{tag}: analytic roofline without the "
+                          f"roofline.oisma_engine projection stamp")
+        elif oe.get("backend") != "oisma_engine" or "error" in oe:
+            errors.append(f"{tag}: malformed oisma_engine stamp: {oe!r}")
     return errors
 
 

@@ -315,6 +315,15 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     record["roofline"]["flops_breakdown"] = cell["flops"]
     record["roofline"]["hbm_breakdown"] = cell["hbm"]
     record["roofline"]["coll_breakdown"] = cell["coll"]
+    # OISMA-engine backend: the same matmul inventory projected onto the
+    # paper's engine (repro.sim, double-buffered reprogramming) so every
+    # cell carries an engine-projected step time next to the chip roofline.
+    from repro.roofline.model import oisma_engine_projection
+    try:
+        record["roofline"]["oisma_engine"] = oisma_engine_projection(
+            cfg, shape)
+    except Exception as exc:  # the projection must never kill a cell
+        record["roofline"]["oisma_engine"] = {"error": str(exc)}
     record["status"] = "ok"
     return record
 

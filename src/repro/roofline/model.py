@@ -474,6 +474,60 @@ def matmul_inventory(cfg: ModelConfig, shape: ShapeConfig) -> List[MatmulShape]:
     return inv.entries()
 
 
+# ---------------------------------------------------------------------------
+# OISMA-engine backend: the same inventory, projected onto the paper's
+# in-memory-computing engine (repro.sim) instead of the TPU roofline
+# ---------------------------------------------------------------------------
+
+def oisma_engine_projection(cfg: ModelConfig, shape: ShapeConfig, *,
+                            engines: int = 1, technology_nm: int = 22,
+                            double_buffered: bool = True,
+                            include_attention: bool = False,
+                            ) -> Dict[str, float]:
+    """Engine-projected step terms for one cell, stamped by the dry-run
+    next to the chip roofline (``roofline.oisma_engine`` in the records).
+
+    Maps ``matmul_inventory(cfg, shape)`` onto the OISMA engine via
+    ``repro.sim`` — weight matmuls only by default, matching the paper's
+    weight-stationary deployment.  ``latency_s`` is the engine step time
+    with double-buffered reprogramming (serial-stall time reported next to
+    it, so the stamp shows what the overlap buys); ``engines > 1`` prices
+    a ``repro.sim.scaleout`` cluster instead and adds the scaling
+    efficiency.  Closed-form arithmetic only — cheap enough to stamp on
+    every dry-run cell.
+    """
+    from repro.sim import ClusterConfig, EngineConfig, map_model
+    from repro.sim.scaleout import map_model_cluster
+    eng = EngineConfig(technology_nm=technology_nm,
+                       double_buffered=double_buffered)
+    serial = EngineConfig(technology_nm=technology_nm)
+    w = map_model(cfg, shape, eng, include_attention=include_attention)
+    ws = map_model(cfg, shape, serial, include_attention=include_attention)
+    out = {
+        "backend": "oisma_engine",
+        "engines": engines,
+        "technology_nm": technology_nm,
+        "double_buffered": double_buffered,
+        "latency_s": w.latency_s,
+        "serial_reprogram_latency_s": ws.latency_s,
+        "utilization": w.utilization,
+        "achieved_tops_per_watt": w.achieved_tops_per_watt,
+        "gops_per_mm2": w.gops_per_mm2,
+    }
+    if engines > 1:
+        rep = map_model_cluster(
+            cfg, shape, ClusterConfig(engines=engines, engine=eng),
+            include_attention=include_attention)
+        out.update({
+            "latency_s": rep.latency_s,
+            "utilization": rep.utilization,
+            "achieved_tops_per_watt": rep.achieved_tops_per_watt,
+            "gops_per_mm2": rep.gops_per_mm2,
+            "scaling_efficiency": rep.scaling_efficiency,
+        })
+    return out
+
+
 #: Activation-traffic coefficient: bytes moved per token per layer per
 #: d_model unit.  ~10 tensor read/writes fwd (norms, qkv, scores path, mlp
 #: in/out) in bf16; bwd ~2x; remat adds ~1x fwd.

@@ -9,8 +9,12 @@ answers what a *real* MatMul workload achieves on a concrete engine:
                schedules; the 17.6 % VMM saving derived from toggle counts
   mapper.py    weight-stationary tiling of (M, K, N) matmuls — and whole
                models via roofline.model.matmul_inventory — onto an
-               EngineConfig, with utilization, stalls, and the
+               EngineConfig, with utilization, stalls (serial or
+               double-buffered/overlapped reprogramming), and the
                read/mult/accum/reprogram energy budget
+  scaleout.py  multi-engine clusters: one inventory sharded over E
+               engines with per-hop accumulation-traffic costing and the
+               scaling-efficiency curve
   trace.py     per-tile-class event records + summarize() for the tables
 
 ``validate()`` pins the simulator to the paper's published endpoints
@@ -18,18 +22,28 @@ answers what a *real* MatMul workload achieves on a concrete engine:
 3.28 TOPS/mm²) to < 0.5 %.  See docs/oisma_engine.md.
 """
 from repro.sim.array import ArrayModel, TileCost
-from repro.sim.calibration import DEFAULT_WRITE_CAL, RRAMWriteCalibration
+from repro.sim.calibration import (DEFAULT_INTERCONNECT_CAL,
+                                   DEFAULT_WRITE_CAL,
+                                   InterconnectCalibration,
+                                   RRAMWriteCalibration)
 from repro.sim.dataflow import DATAFLOWS, Dataflow, get_dataflow, \
     vmm_saving_fraction
 from repro.sim.mapper import (EngineConfig, MatmulReport, WorkloadReport,
                               ideal_workload, map_matmul, map_model,
                               map_workload, validate)
+from repro.sim.scaleout import (ClusterConfig, ClusterMatmulReport,
+                                ClusterReport, map_cluster,
+                                map_model_cluster, scaling_curve,
+                                shard_matmul)
 from repro.sim.trace import TileEvent, Trace
 
 __all__ = [
     "ArrayModel", "TileCost", "DEFAULT_WRITE_CAL", "RRAMWriteCalibration",
+    "DEFAULT_INTERCONNECT_CAL", "InterconnectCalibration",
     "DATAFLOWS", "Dataflow", "get_dataflow",
     "vmm_saving_fraction", "EngineConfig", "MatmulReport", "WorkloadReport",
     "ideal_workload", "map_matmul", "map_model", "map_workload", "validate",
+    "ClusterConfig", "ClusterMatmulReport", "ClusterReport", "map_cluster",
+    "map_model_cluster", "scaling_curve", "shard_matmul",
     "TileEvent", "Trace",
 ]

@@ -1,8 +1,10 @@
-"""RRAM write-cost calibration: the one place the assumptions live.
+"""Device/interconnect calibration: the one place the assumptions live.
 
 The OISMA paper publishes read/compute energies (Table II) but not RRAM
-*write* costs, so the simulator's reprogramming model rests on two
-documented assumptions, typical for 1T1R HfO2 RRAM:
+*write* costs or any multi-engine interconnect, so the simulator's
+reprogramming and scale-out models rest on documented assumptions.
+
+RRAM writes — two numbers, typical for 1T1R HfO2 RRAM:
 
 * **10 pJ/bit** write energy — SET/RESET pulse energy per cell.  Device-
   limited (filament physics), so it does NOT scale with the CMOS node the
@@ -23,6 +25,17 @@ ROADMAP calibration item), override at the engine level::
     EngineConfig(write_cal=cal)
 
 and every tile class, stall and energy row downstream follows.
+
+Multi-engine interconnect (``repro.sim.scaleout``) — a per-hop
+energy/latency model of the network-on-chip that carries partial-sum
+accumulation traffic between engines.  The three numbers (hop energy per
+byte, hop latency, link bandwidth) are typical for a 2D-mesh NoC at
+mature nodes; like the write numbers they are assumptions, tagged with a
+``source`` string that the tables carry, and overridable in one place::
+
+    ClusterConfig(engines=8,
+                  interconnect=InterconnectCalibration(
+                      hop_energy_fj_per_byte=50.0, source="measured"))
 """
 from __future__ import annotations
 
@@ -40,3 +53,22 @@ class RRAMWriteCalibration:
 
 #: the repo-wide default; import this rather than re-literal-ing the numbers
 DEFAULT_WRITE_CAL = RRAMWriteCalibration()
+
+
+@dataclasses.dataclass(frozen=True)
+class InterconnectCalibration:
+    """Per-hop cost of the inter-engine NoC (assumed, not published).
+
+    ``repro.sim.scaleout`` charges one hop per partial-sum block moved in
+    a binary-tree reduction; energy is device/wire-limited like the RRAM
+    writes, so it does NOT scale with the CMOS node by default.
+    """
+    hop_energy_fj_per_byte: float = 180.0  # router + wire, ~0.18 pJ/B/hop
+    hop_latency_s: float = 5e-9            # router traversal + flight time
+    link_bytes_per_s: float = 8e9          # 8 GB/s per engine-to-engine link
+    #: provenance tag carried into reports/tables
+    source: str = "assumed: 2D-mesh NoC (paper models a single engine)"
+
+
+#: the repo-wide default interconnect assumption set
+DEFAULT_INTERCONNECT_CAL = InterconnectCalibration()

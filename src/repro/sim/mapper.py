@@ -6,16 +6,35 @@ assigned to the engine's ``banks × arrays_per_bank`` arrays in rounds.
 Within a round every array drains its tile against all M input rows in
 parallel, so a round's wall-clock is the *largest* tile's cycle count;
 when there are more tiles than arrays, later rounds must reprogram the
-RRAM (stall + write energy).  Matmuls tagged non-stationary (attention
-score/value contractions: both operands are activations) reprogram on
-every tile — the mapper makes that cost visible instead of pretending the
-engine only ever sees friendly workloads.
+RRAM (write energy, and a stall whose exposure depends on the buffering
+mode).  Matmuls tagged non-stationary (attention score/value
+contractions: both operands are activations) reprogram on every tile —
+the mapper makes that cost visible instead of pretending the engine only
+ever sees friendly workloads.
 
-Tiles are accounted in closed form by (k_rows × n_words) class — at most
-four classes per matmul (interior + K-edge + N-edge + corner) — and the
-round walk iterates over rounds, not tiles, so mapping a 10^12-MAC model
-is O(tiles / arrays) cheap arithmetic.  tests/test_sim.py pins this
-accounting against a brute-force per-tile enumeration.
+Reprogramming comes in two wall-clock modes (energy is identical):
+
+* serial (``double_buffered=False``, the default and the paper's single
+  weight plane): round r's writes stall the engine for the full
+  port-limited program time p_r before its compute c_r starts.
+* double-buffered (``double_buffered=True``): while round r computes on
+  the active plane, round r+1's tiles program the shadow plane, so only
+  ``max(0, p_{r+1} − c_r)`` of each program is exposed; the round-walk
+  recurrence is ``start_{r+1} = start_r + c_r + max(0, p_{r+1} − c_r)``.
+
+Writes drain through ``write_ports_per_bank`` ports per bank (default:
+one port per array, i.e. all arrays program in parallel); fewer ports
+serialize a round's writes into waves and stretch p_r.  The full
+cycle/energy accounting story is written down in docs/sim_scaleout.md.
+
+INVARIANT: the closed-form tile-class accounting below — at most four
+(k_rows × n_words) classes per matmul (interior + K-edge + N-edge +
+corner), with the round walk iterating over rounds, not tiles, so mapping
+a 10^12-MAC model is O(tiles / arrays) cheap arithmetic — must equal a
+brute-force per-tile enumeration (cycles AND energy, both buffering
+modes, any port count).  ``tests/test_sim.py`` pins this invariant:
+``_brute_force``/``_brute_force_timeline`` re-derive every quantity tile
+by tile (hypothesis-generated shapes included) and assert equality.
 
 Achieved-vs-peak metrics come in two flavours:
 
@@ -23,6 +42,9 @@ Achieved-vs-peak metrics come in two flavours:
   reproduces Table III's array-level 0.891 TOPS/W at the ideal point.
 * ``macro_tops_per_watt`` — throughput / whole-macro power (array +
   accumulation periphery); reproduces the abstract's 0.789 TOPS/W.
+
+Multi-engine scale-out (sharding one inventory over E engines with
+accumulation traffic) lives in ``repro.sim.scaleout``.
 """
 from __future__ import annotations
 
@@ -53,10 +75,31 @@ class EngineConfig:
     #: RRAM write-cost assumptions — the single override point for the
     #: whole engine (see repro.sim.calibration)
     write_cal: RRAMWriteCalibration = DEFAULT_WRITE_CAL
+    #: write ports per bank: how many of a bank's arrays can program
+    #: concurrently.  0 (default) means one port per array — every write
+    #: of a round proceeds in parallel, the legacy model; 1 serializes a
+    #: bank's writes completely.
+    write_ports_per_bank: int = 0
+    #: shadow weight plane per array: round r+1's tiles program while
+    #: round r computes, so only max(0, program − compute) of each
+    #: reprogram is exposed wall-clock (energy unchanged).
+    double_buffered: bool = False
+    #: area overhead charged for the shadow plane when double-buffered.
+    #: Default 0: the 1T1R cell plane is a small fraction of the
+    #: periphery-dominated macro (the paper publishes no cell/periphery
+    #: area split) — a documented assumption, overridable per engine.
+    shadow_area_overhead: float = 0.0
 
     @property
     def arrays(self) -> int:
         return self.banks * self.arrays_per_bank
+
+    @property
+    def write_ports(self) -> int:
+        """Effective concurrent writes per bank (clamped to the arrays)."""
+        if self.write_ports_per_bank <= 0:
+            return self.arrays_per_bank
+        return min(self.write_ports_per_bank, self.arrays_per_bank)
 
     @property
     def array_model(self) -> ArrayModel:
@@ -97,7 +140,10 @@ class EngineConfig:
 
     @property
     def area_mm2(self) -> float:
-        return self._oc.area_mm2
+        a = self._oc.area_mm2
+        if self.double_buffered:
+            a *= 1.0 + self.shadow_area_overhead
+        return a
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +212,39 @@ def _tile_classes(k: int, n: int) -> List[Tuple[int, int, int]]:
     return out
 
 
+def _round_program_cycles(bounds, lo: int, hi: int, apb: int, ports: int,
+                          am: ArrayModel) -> float:
+    """Port-limited wall-clock program time of one round's writes.
+
+    Within a round, tiles are written deepest-first and distributed to
+    banks in blocks of ``apb``; each bank drains its block through
+    ``ports`` write ports in waves (a wave's duration is its deepest
+    tile's program time).  Bank 0 holds the deepest block and each of its
+    waves dominates the corresponding wave of every other bank (per-row
+    program time is monotone in tile depth), so the round's program time
+    is bank 0's wave sum.  The brute-force enumeration in
+    tests/test_sim.py takes the max over ALL banks and must agree.
+    """
+    kts = sorted(((kt, min(hi, h) - max(lo, l))
+                  for l, h, kt, nw in bounds if l < hi and h > lo),
+                 reverse=True)
+    n_bank0 = min(apb, hi - lo)
+    cycles = 0.0
+    consumed = 0
+    for kt, cnt in kts:
+        if consumed >= n_bank0:
+            break
+        take = min(cnt, n_bank0 - consumed)
+        # waves whose first (deepest) tile falls in this kt run: wave
+        # starts are the multiples of ``ports`` in [consumed, consumed+take)
+        first = -(-consumed // ports) * ports
+        if first < consumed + take:
+            n_waves = (consumed + take - 1 - first) // ports + 1
+            cycles += n_waves * am.program_tile(kt, 1).cycles
+        consumed += take
+    return cycles
+
+
 def map_matmul(m: float, k: int, n: int, engine: EngineConfig = None, *,
                name: str = "matmul", stationary: bool = True,
                count: float = 1.0,
@@ -208,24 +287,31 @@ def map_matmul(m: float, k: int, n: int, engine: EngineConfig = None, *,
                 return kt, nw
         return bounds[-1][2], bounds[-1][3]
 
-    # wall-clock: per round, compute = largest tile; reprogram stall = the
-    # deepest tile being (re)written in that round (writes run in parallel
-    # across arrays, serially with that array's compute).
+    # wall-clock: per round, compute = largest tile; a round's writes take
+    # the port-limited program time p_r.  Serial mode exposes p_r in full;
+    # double-buffered mode programs round r+1's tiles into the shadow
+    # plane while round r computes, exposing only max(0, p_r − c_{r−1}).
     compute_cycles = 0.0
-    round0_stall = 0.0
-    rest_stall = 0.0
+    p0 = 0.0
+    rest_serial = 0.0
+    rest_exposed = 0.0
+    prev_c = 0.0
+    apb = engine.arrays_per_bank
+    ports = engine.write_ports
     for r in range(rounds):
         lo, hi = r * A, min(T, (r + 1) * A)
         kt0, nw0 = _class_at(lo)
-        compute_cycles += df.mult_cycles(m, kt0, nw0)
-        if free:
-            continue
-        max_kt = max(kt for l, h, kt, nw in bounds if l < hi and h > lo)
-        stall = am.program_tile(max_kt, 1).cycles
-        if r == 0:
-            round0_stall = stall
-        else:
-            rest_stall += stall
+        c_r = df.mult_cycles(m, kt0, nw0)
+        compute_cycles += c_r
+        if not free:
+            p_r = _round_program_cycles(bounds, lo, hi, apb, ports, am)
+            if r == 0:
+                p0 = p_r
+            else:
+                rest_serial += p_r
+                rest_exposed += max(0.0, p_r - prev_c)
+        prev_c = c_r
+    c_last = prev_c
 
     # ``count`` instances are DISTINCT weight matrices (merged per-layer /
     # per-expert classes): the engine's A-array residency is shared across
@@ -240,9 +326,21 @@ def map_matmul(m: float, k: int, n: int, engine: EngineConfig = None, *,
         free_passes = 0.0
     full_inst = int(resident // T) if T else 0
     rem = resident - full_inst * T
-    program_cycles = round0_stall * free_passes
-    reprogram_cycles = (rest_stall * count
-                        + round0_stall * (count - free_passes))
+    program_cycles = p0 * free_passes
+    if engine.double_buffered and not free:
+        # steady state: instance i+1's round-0 writes overlap instance i's
+        # last-round compute; the very first written round of a
+        # non-stationary stream has no prior compute to hide behind.
+        exposed0 = max(0.0, p0 - c_last)
+        reprogram_cycles = rest_exposed * count
+        if stationary:
+            reprogram_cycles += exposed0 * (count - free_passes)
+        else:
+            first = min(count, 1.0)
+            reprogram_cycles += p0 * first + exposed0 * (count - first)
+    else:
+        reprogram_cycles = (rest_serial * count
+                            + p0 * (count - free_passes))
 
     # energy: sum over all tiles by class
     compute = TileCost(0.0, 0.0)
