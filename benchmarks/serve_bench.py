@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Serving benchmark: p50/p99 latency and goodput vs offered load.
+
+Sweeps the synthetic-traffic harness (``repro.serve.traffic``) over the
+config zoo's smoke models and a rising offered-load axis, one fresh
+``PagedServeEngine`` per (config, load) cell, and writes the result as
+``BENCH_serve.json`` — the committed trajectory that makes serving
+regressions visible PR-over-PR (``scripts/check_results.py`` validates
+its schema and the monotone load axis in CI).
+
+All numbers are in engine steps (see ``docs/serving.md``), so the file
+is deterministic for a fixed seed and identical across machines; the
+decode capacity of ``slots`` tokens/step gives goodput an absolute
+ceiling, so utilization reads directly as "how busy the serving layer
+keeps the arrays" — the workload-level half of the paper's delivered-
+vs-peak TOPS/W story.
+
+Usage:
+  PYTHONPATH=src python benchmarks/serve_bench.py --out BENCH_serve.json
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke   # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+CONFIGS = ["h2o_danube_1p8b", "minicpm3_4b", "whisper_base", "zamba2_2p7b"]
+LOADS = [0.05, 0.1, 0.2, 0.4]
+SMOKE_CONFIGS = ["h2o_danube_1p8b", "whisper_base"]
+SMOKE_LOADS = [0.1, 0.4]
+
+
+def run(configs, loads, num_requests, seed):
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models.model import build
+    from repro.models.params import init_tree
+    from repro.serve.paged_engine import PagedEngineConfig, PagedServeEngine
+    from repro.serve.traffic import TrafficConfig, run_traffic
+
+    ecfg = PagedEngineConfig(slots=4, block_size=8, num_blocks=64,
+                             max_prefill_tokens=16)
+    out = []
+    for name in configs:
+        cfg = get_config(name, smoke=True)
+        model = build(cfg)
+        params = init_tree(model.schema(), jax.random.key(0))
+        sweep = []
+        for load in loads:
+            tcfg = TrafficConfig(num_requests=num_requests,
+                                 offered_load=load, seed=seed,
+                                 vocab=cfg.vocab_size)
+            engine = PagedServeEngine(model, params, cfg, ecfg)
+            rec = run_traffic(engine, tcfg)
+            sweep.append(rec)
+            print(f"{name} load={load}: p50={rec['latency_p50']:.0f} "
+                  f"p99={rec['latency_p99']:.0f} "
+                  f"goodput={rec['goodput_tokens_per_step']:.3f} "
+                  f"({rec['completed']}/{rec['requests']} done, "
+                  f"{rec['steps']} steps)", file=sys.stderr)
+        out.append({"config": name, "family": cfg.family, "sweep": sweep})
+    return {
+        "benchmark": "serve",
+        "schema_version": 1,
+        "units": {"time": "engine steps",
+                  "goodput": "output tokens per engine step"},
+        "engine": dataclasses.asdict(ecfg),
+        "traffic": {"num_requests": num_requests, "seed": seed},
+        "configs": out,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer configs/loads/requests")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    if args.smoke:
+        doc = run(SMOKE_CONFIGS, SMOKE_LOADS, num_requests=10, seed=args.seed)
+    else:
+        doc = run(CONFIGS, LOADS, num_requests=32, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} ({time.time() - t0:.1f}s)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,16 @@
 #!/usr/bin/env python
-"""Integrity gate for results/dryrun.json — run by CI on every push.
+"""Integrity gate for committed result files — run by CI on every push.
 
-Checks, in order:
+Validates two kinds of document, auto-detected by shape:
+
+* ``results/dryrun.json`` — a list of launcher records (the default);
+* ``BENCH_serve.json`` — the serving benchmark, a dict stamped
+  ``"benchmark": "serve"``: schema fields per record, a strictly
+  increasing offered-load axis per config (a shuffled or duplicated
+  sweep means the committed trajectory rotted), percentile sanity
+  (p99 >= p50), and at least three configs covered.
+
+Dryrun checks, in order:
 
   1. every record carries the base schema fields (arch/shape/mesh/status,
      plus the rules/mesh_shape experiment stamps the resume logic keys on);
@@ -24,6 +33,7 @@ Checks, in order:
 Exit code 0 = gate passes; 1 = any violation (all violations printed).
 
 Usage:  PYTHONPATH=src python scripts/check_results.py [results/dryrun.json]
+        PYTHONPATH=src python scripts/check_results.py BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -99,18 +109,74 @@ def check(records) -> list:
     return errors
 
 
+SERVE_TOP_FIELDS = ("schema_version", "units", "engine", "traffic", "configs")
+SERVE_RECORD_FIELDS = ("offered_load", "requests", "completed", "steps",
+                       "output_tokens", "latency_p50", "latency_p99",
+                       "ttft_p50", "ttft_p99", "goodput_tokens_per_step",
+                       "utilization")
+SERVE_MIN_CONFIGS = 3
+
+
+def check_serve(doc, min_configs: int = SERVE_MIN_CONFIGS) -> list:
+    errors = []
+    for f in SERVE_TOP_FIELDS:
+        if f not in doc:
+            errors.append(f"serve doc: missing top-level field {f!r}")
+    configs = doc.get("configs", [])
+    if len(configs) < min_configs:
+        errors.append(f"serve doc: only {len(configs)} configs, "
+                      f"need >= {min_configs}")
+    for c in configs:
+        name = c.get("config", "?")
+        sweep = c.get("sweep", [])
+        if not sweep:
+            errors.append(f"serve {name}: empty sweep")
+            continue
+        loads = []
+        for j, r in enumerate(sweep):
+            tag = f"serve {name} sweep[{j}]"
+            for f in SERVE_RECORD_FIELDS:
+                if not isinstance(r.get(f), (int, float)):
+                    errors.append(f"{tag}: missing/non-numeric {f!r}")
+            loads.append(r.get("offered_load", 0))
+            if r.get("completed", 0) > r.get("requests", 0):
+                errors.append(f"{tag}: completed > requests")
+            if r.get("completed", 0) <= 0:
+                errors.append(f"{tag}: no request completed")
+            for m in ("latency", "ttft"):
+                if r.get(f"{m}_p99", 0) < r.get(f"{m}_p50", 0):
+                    errors.append(f"{tag}: {m} p99 < p50")
+            if not 0 <= r.get("utilization", -1) <= 1 + 1e-9:
+                errors.append(f"{tag}: utilization outside [0, 1]")
+        if any(b <= a for a, b in zip(loads, loads[1:])):
+            errors.append(f"serve {name}: offered_load axis not strictly "
+                          f"increasing: {loads}")
+    return errors
+
+
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    min_configs = int(sys.argv[2]) if len(sys.argv) > 2 else SERVE_MIN_CONFIGS
     with open(path) as f:
         records = json.load(f)
-    errors = check(records)
+    if isinstance(records, dict) and records.get("benchmark") == "serve":
+        errors = check_serve(records, min_configs)
+        n = sum(len(c.get("sweep", [])) for c in records.get("configs", []))
+    else:
+        errors = check(records)
+        n = len(records)
     for e in errors:
         print(f"FAIL: {e}")
     if errors:
-        print(f"{len(errors)} violation(s) in {path} ({len(records)} records)")
+        print(f"{len(errors)} violation(s) in {path} ({n} records)")
         return 1
-    print(f"OK: {path} ({len(records)} records, "
-          f"{sum(1 for r in records if r.get('pipeline_stages'))} pipelined)")
+    if isinstance(records, dict):
+        print(f"OK: {path} ({len(records['configs'])} configs, "
+              f"{n} sweep records)")
+    else:
+        print(f"OK: {path} ({n} records, "
+              f"{sum(1 for r in records if r.get('pipeline_stages'))} "
+              f"pipelined)")
     return 0
 
 

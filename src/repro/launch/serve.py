@@ -1,6 +1,12 @@
-"""Serving launcher CLI: batched prefill+decode over the serving engine.
+"""Serving launcher CLI: batched prefill+decode over a serving engine.
 
   python -m repro.launch.serve --arch zamba2_2p7b --requests 8
+  python -m repro.launch.serve --paged --requests 8   # block-pool cache,
+                                                      # chunked prefill
+
+``--paged`` runs the production-shaped ``PagedServeEngine`` (paged KV
+cache + priority scheduler + chunked prefill, see ``docs/serving.md``);
+the default stays the contiguous reference engine.
 """
 from __future__ import annotations
 
@@ -16,6 +22,12 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged engine: block-pool cache, chunked prefill, "
+                         "priority scheduler")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=64)
+    ap.add_argument("--max-prefill-tokens", type=int, default=16)
     args = ap.parse_args()
 
     import jax
@@ -24,26 +36,44 @@ def main():
     from repro.configs import get_config
     from repro.models import build
     from repro.models.params import init_tree
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
 
     cfg = get_config(args.arch, smoke=not args.full_config)
     model = build(cfg)
     params = init_tree(model.schema(), jax.random.key(0))
-    engine = ServeEngine(model, params, cfg,
-                         EngineConfig(slots=args.slots, max_len=64,
-                                      temperature=args.temperature))
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(3, cfg.vocab_size,
-                                        4 + i % 4).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
+
+    def prompts():
+        return [rng.integers(3, cfg.vocab_size, 4 + i % 4).astype(np.int32)
+                for i in range(args.requests)]
+
+    if args.paged:
+        from repro.serve.paged_engine import (PagedEngineConfig,
+                                              PagedRequest, PagedServeEngine)
+        engine = PagedServeEngine(model, params, cfg, PagedEngineConfig(
+            slots=args.slots, block_size=args.block_size,
+            num_blocks=args.num_blocks,
+            max_prefill_tokens=args.max_prefill_tokens,
+            temperature=args.temperature))
+        reqs = [PagedRequest(rid=i, prompt=p, max_new_tokens=args.max_new,
+                             priority=i % 2)
+                for i, p in enumerate(prompts())]
+    else:
+        from repro.serve.engine import EngineConfig, Request, ServeEngine
+        engine = ServeEngine(model, params, cfg,
+                             EngineConfig(slots=args.slots, max_len=64,
+                                          temperature=args.temperature))
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=args.max_new)
+                for i, p in enumerate(prompts())]
     t0 = time.time()
     results = engine.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(v) for v in results.values())
     print(f"{cfg.name}: {len(results)} requests, {n_tok} tokens, "
           f"{dt:.1f}s ({n_tok / dt:.1f} tok/s)")
+    if args.paged:
+        print(f"  engine steps {engine.step_count}, compiled shapes: "
+              f"prefill {len(engine.stats['prefill_shapes'])}, "
+              f"decode {len(engine.stats['decode_shapes'])}")
     for rid in sorted(results):
         print(f"  req {rid}: {results[rid]}")
 

@@ -147,19 +147,53 @@ def init_cache(spec) -> Dict[str, jax.Array]:
 
 def _cache_write(cache: Dict[str, jax.Array], updates: Dict[str, jax.Array],
                  pos: jax.Array) -> Dict[str, jax.Array]:
-    """Write one token (Sq=1) at absolute position ``pos`` (scalar int32).
+    """Write one token (Sq=1) at absolute position ``pos``.
 
-    Ring semantics: slot = pos % cache_len (== pos for full caches).
+    ``pos`` is a scalar int32 (every row writes the same slot: lock-step
+    decode over a left-padded batch) or a (B,) vector (per-row positions:
+    the paged engine decodes requests at independent depths).
+    Ring semantics either way: slot = pos % cache_len (== pos for full
+    caches).
     """
     n = cache["pos"].shape[1]
+    b = cache["pos"].shape[0]
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        slot = pos % n
+        new = {}
+        for key, val in updates.items():
+            new[key] = jax.lax.dynamic_update_slice_in_dim(
+                cache[key], val.astype(cache[key].dtype), slot, axis=1)
+        new["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32),
+            slot, axis=1)
+        return new
+    rows = jnp.arange(b)
     slot = pos % n
     new = {}
     for key, val in updates.items():
+        new[key] = cache[key].at[rows, slot].set(
+            val[:, 0].astype(cache[key].dtype))
+    new["pos"] = cache["pos"].at[rows, slot].set(pos.astype(jnp.int32))
+    return new
+
+
+def _cache_append(cache: Dict[str, jax.Array], updates: Dict[str, jax.Array],
+                  q_pos: jax.Array) -> Dict[str, jax.Array]:
+    """Append a contiguous chunk at slots [p0, p0+Sq) (chunked prefill).
+
+    ``q_pos`` is the (B, Sq) position array of the chunk; rows share the
+    same contiguous span, so slot addressing comes from row 0.  The caller
+    guarantees p0 + Sq <= cache length (``dynamic_update_slice`` silently
+    clamps out-of-range starts).  Not valid for ring caches.
+    """
+    p0 = q_pos[0, 0]
+    new = {}
+    for key, val in updates.items():
         new[key] = jax.lax.dynamic_update_slice_in_dim(
-            cache[key], val.astype(cache[key].dtype), slot, axis=1)
-    b = cache["pos"].shape[0]
+            cache[key], val.astype(cache[key].dtype), p0, axis=1)
     new["pos"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32), slot, axis=1)
+        cache["pos"], q_pos.astype(jnp.int32), p0, axis=1)
     return new
 
 
@@ -189,10 +223,13 @@ def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
               window: Optional[int], cache: Optional[Dict] = None,
               prefix_len: Optional[jax.Array] = None,
               cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
-              causal: bool = True, rope: bool = True):
+              causal: bool = True, rope: bool = True, append: bool = False):
     """Returns (out, new_cache).  Modes:
        * train/prefill: cache is None or written densely
        * decode: x is (B, 1, D); cache holds the past
+       * chunked prefill (``append``): the Sq tokens are appended into the
+         cache at slots [p0, p0+Sq) and attend over the WHOLE cache, so a
+         chunk sees every previously appended chunk
        * cross attention: cross_kv supplies (k, v) precomputed; no cache.
     """
     from repro.dist import tp as mtp
@@ -230,8 +267,12 @@ def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
     new_cache = cache
     if cache is not None and cross_kv is None:
         if sq == 1:  # decode: write one slot, attend over the cache
-            new_cache = _cache_write(cache, {"k": k, "v": v}, q_pos[0, 0])
+            new_cache = _cache_write(cache, {"k": k, "v": v}, q_pos[:, 0])
             k_all, v_all, kv_pos = new_cache["k"], new_cache["v"], new_cache["pos"]
+        elif append:  # chunked prefill: append, attend over the full cache
+            new_cache = _cache_append(cache, {"k": k, "v": v}, q_pos)
+            k_all, v_all, kv_pos = (new_cache["k"], new_cache["v"],
+                                    new_cache["pos"])
         else:        # prefill: dense write (ring caches keep the last n
             # tokens at slots pos % n, matching decode's addressing)
             n = cache["k"].shape[1]
@@ -320,10 +361,13 @@ def _mla_q(p, cfg, x, tp_attn=False):
 
 
 def mla_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
-              cache: Optional[Dict] = None, window=None):
+              cache: Optional[Dict] = None, window=None, append: bool = False):
     """MLA attention.  Prefill/train expands K/V from the latent; decode
     uses the absorbed formulation (scores in the kv_lora latent space), so
-    the per-step cost is O(S * kv_lora) instead of O(S * H * head_dim)."""
+    the per-step cost is O(S * kv_lora) instead of O(S * H * head_dim).
+    ``append`` (chunked prefill): latents are appended at [p0, p0+Sq) and
+    K/V are expanded from the WHOLE cache, so the chunk attends every
+    previously appended chunk."""
     from repro.dist import tp as mtp
     b, sq, _ = x.shape
     mode = cfg.matmul_mode
@@ -347,7 +391,7 @@ def mla_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
 
     if cache is not None and sq == 1:
         # ---- absorbed decode ----
-        new_cache = _cache_write(cache, {"ckv": ckv, "krope": krope}, q_pos[0, 0])
+        new_cache = _cache_write(cache, {"ckv": ckv, "krope": krope}, q_pos[:, 0])
         ckv_all = new_cache["ckv"].astype(jnp.float32)        # (B, S, R)
         kr_all = new_cache["krope"].astype(jnp.float32)       # (B, S, P)
         kv_pos = new_cache["pos"]
@@ -362,6 +406,26 @@ def mla_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
         pr = jax.nn.softmax(scores, axis=-1)
         o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, ckv_all)     # (B,1,H,R)
         out = jnp.einsum("bqhr,rhv->bqhv", o_lat, p["wuv"].astype(jnp.float32))
+    elif cache is not None and append:
+        # ---- chunked prefill: append latents, expand K/V from the full
+        # cache (bf16-stored latents, the same rounding absorbed decode
+        # reads), attend over every previously appended chunk ----
+        new_cache = _cache_append(cache, {"ckv": ckv, "krope": krope}, q_pos)
+        ckv_all = new_cache["ckv"].astype(jnp.float32)
+        kr_all = new_cache["krope"].astype(jnp.float32)
+        kv_pos = new_cache["pos"]
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv_all,
+                            p["wuk"].astype(jnp.float32))
+        v = jnp.einsum("bsr,rhv->bshv", ckv_all,
+                       p["wuv"].astype(jnp.float32))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                      k_nope.shape[:3] + (cfg.qk_rope_head_dim,))],
+            axis=-1)
+        q = jnp.concatenate([q_nope.astype(jnp.float32),
+                             q_rope.astype(jnp.float32)], axis=-1)
+        out = sdpa(q, k, v, q_pos, kv_pos, causal=True, window=window,
+                   chunk=cfg.attn_chunk)
     else:
         # ---- expanded train/prefill ----
         if cache is not None:

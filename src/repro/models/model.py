@@ -76,15 +76,16 @@ def _layer_windows(cfg: ModelConfig) -> np.ndarray:
 
 
 def _decoder_layer_apply(p, cfg: ModelConfig, x, positions, *, window,
-                         cache=None, prefix_len=None):
+                         cache=None, prefix_len=None, append=False):
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if cfg.attention_type == "mla":
         a, new_cache = attn.mla_apply(p["attn"], cfg, h, positions,
-                                      cache=cache, window=window)
+                                      cache=cache, window=window,
+                                      append=append)
     else:
         a, new_cache = attn.gqa_apply(p["attn"], cfg, h, positions,
                                       window=window, cache=cache,
-                                      prefix_len=prefix_len)
+                                      prefix_len=prefix_len, append=append)
     if "post_ln1" in p:
         a = rms_norm(a, p["post_ln1"], cfg.norm_eps)
     x = x + a
@@ -133,7 +134,8 @@ class DecoderModel:
             def layer_fn(x, lp, lcache, w):
                 return _decoder_layer_apply(lp, cfg, x, positions, window=w,
                                             cache=lcache,
-                                            prefix_len=prefix_len)
+                                            prefix_len=prefix_len,
+                                            append=mode == "prefill_chunk")
 
             fn = (jax.checkpoint(layer_fn)
                   if (cfg.remat and mode == "train") else layer_fn)
@@ -393,16 +395,47 @@ class DecoderModel:
         logits = self._logits(params, h[:, -1:])
         return logits[:, 0], cache
 
+    def prefill_chunk(self, params, batch, cache, pos0):
+        """Chunked prefill: append a chunk at positions [pos0, pos0+C).
+
+        ``cache`` already holds every earlier chunk (offset == absolute
+        position, no padding); the chunk attends over the whole cache and
+        is written at offsets [pos0, pos0+C).  ``pos0`` is a traced scalar,
+        so one compile covers every chunk of the same (C, cache_len) shape
+        — the paged engine decomposes prompts into power-of-two chunks for
+        an O(log) compile footprint.  Returns (last-token logits, cache).
+        """
+        cfg = self.cfg
+        assert cfg.num_prefix_tokens == 0, "chunked prefill: no prefix tokens"
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_lookup(params["embed"], tokens,
+                         scale=cfg.local_global_pattern > 0)
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos0) + jnp.arange(s)[None], (b, s))
+        h, cache, _ = self._stack(params, x, positions, cache, None,
+                                  "prefill_chunk")
+        logits = self._logits(params, h[:, -1:])
+        return logits[:, 0], cache
+
     def decode_step(self, params, tokens, cache, pos):
         cfg = self.cfg
         x = embed_lookup(params["embed"], tokens,
                          scale=cfg.local_global_pattern > 0 or
                          cfg.num_prefix_tokens > 0)
         b = x.shape[0]
-        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, 1))
+        positions = _decode_positions(pos, b)
         h, cache, _ = self._stack(params, x, positions, cache, None, "decode")
         logits = self._logits(params, h)
         return logits[:, 0], cache
+
+
+def _decode_positions(pos, b):
+    """(B, 1) positions from a scalar (lock-step) or (B,) (paged) pos."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:
+        return pos.reshape(b, 1)
+    return jnp.broadcast_to(pos[None, None], (b, 1))
 
 
 def _none_like(tree):
@@ -479,6 +512,7 @@ class EncDecModel:
         EXPERIMENTS.md §Roofline whisper-decode note)."""
         cfg = self.cfg
         kh, hd = cfg.num_kv_heads, cfg.head_dim
+        append = mode == "prefill_chunk"
 
         def body(carry, inp):
             x, = carry
@@ -486,7 +520,8 @@ class EncDecModel:
             lcache = _as_cache(lcache)
             h = layer_norm(x, lp["ln1"]["gamma"], lp["ln1"]["beta"], cfg.norm_eps)
             a, ncache = attn.gqa_apply(lp["self_attn"], cfg, h, positions,
-                                       window=None, cache=lcache, rope=False)
+                                       window=None, cache=lcache, rope=False,
+                                       append=append)
             x = x + a
             h = layer_norm(x, lp["ln_x"]["gamma"], lp["ln_x"]["beta"], cfg.norm_eps)
             if lcross is not None:
@@ -579,13 +614,42 @@ class EncDecModel:
                             params["embed"].astype(jnp.float32))
         return logits, cache
 
+    def prefill_chunk(self, params, batch, cache, pos0):
+        """Chunked prefill.  The first chunk carries ``frames`` and runs
+        the encoder (filling the per-layer cross K/V cache); later chunks
+        read cross K/V from the cache and only append self-attention K/V
+        at offsets [pos0, pos0+C).  Returns (last-token logits, cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        if "frames" in batch:
+            enc_out, cross_cache = self.encode(params, batch["frames"]), None
+        else:
+            enc_out, cross_cache = None, cache["cross"]
+        x = embed_lookup(params["embed"], tokens)
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"],
+                                             jnp.asarray(pos0), s,
+                                             axis=0)[None]
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos0) + jnp.arange(s)[None], (b, s))
+        h, selfc, cross = self._decode_stack(params, x, positions, enc_out,
+                                             cache["self"], "prefill_chunk",
+                                             cross_cache=cross_cache)
+        logits = jnp.einsum("bd,vd->bv", h[:, -1].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        return logits, {"self": selfc, "cross": cross}
+
     def decode_step(self, params, tokens, cache, pos):
         cfg = self.cfg
         b = tokens.shape[0]
         x = embed_lookup(params["embed"], tokens)
-        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"],
-                                             pos, 1, axis=0)[None]
-        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, 1))
+        pos = jnp.asarray(pos)
+        if pos.ndim == 1:  # paged decode: per-row learned positions
+            x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None]
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"],
+                                                 pos, 1, axis=0)[None]
+        positions = _decode_positions(pos, b)
         h, selfc, cross = self._decode_stack(params, x, positions, None,
                                              cache["self"], "decode",
                                              cross_cache=cache["cross"])
@@ -633,6 +697,7 @@ class HybridModel:
         cfg = self.cfg
         n_groups, per = self._group_dims()
         shared = params["shared"]
+        append = mode == "prefill_chunk"
 
         def group_body(carry, inp):
             x, = carry
@@ -657,7 +722,7 @@ class HybridModel:
             h = rms_norm(x, shared["ln1"], cfg.norm_eps)
             ac = gcache["attn"] if gcache is not None else None
             a, new_ac = attn.gqa_apply(shared["attn"], cfg, h, positions,
-                                       window=None, cache=ac)
+                                       window=None, cache=ac, append=append)
             a = a + dense(dense(h, lora_p["a_q"], "bf16"), lora_p["b_q"],
                           "bf16")
             x = x + a
@@ -719,10 +784,25 @@ class HybridModel:
                             params["embed"].astype(jnp.float32))
         return logits, cache
 
+    def prefill_chunk(self, params, batch, cache, pos0):
+        """Chunked prefill: the attention KV caches append at offsets
+        [pos0, pos0+C); the mamba conv/SSM states carry across chunks
+        (``mamba2_apply`` continues from the stored state).  Returns
+        (last-token logits, cache)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_lookup(params["embed"], tokens)
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos0) + jnp.arange(s)[None], (b, s))
+        h, cache = self._forward(params, x, positions, cache, "prefill_chunk")
+        logits = jnp.einsum("bd,vd->bv", h[:, -1].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        return logits, cache
+
     def decode_step(self, params, tokens, cache, pos):
         b = tokens.shape[0]
         x = embed_lookup(params["embed"], tokens)
-        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, 1))
+        positions = _decode_positions(pos, b)
         h, cache = self._forward(params, x, positions, cache, "decode")
         logits = jnp.einsum("bd,vd->bv", h[:, 0].astype(jnp.float32),
                             params["embed"].astype(jnp.float32))
@@ -828,6 +908,18 @@ class XLSTMModel:
         cache = jax.tree.map(lambda sp: jnp.zeros(sp.shape, sp.dtype), spec)
         x = embed_lookup(params["embed"], tokens)
         h, cache = self._forward(params, x, cache, "prefill")
+        logits = jnp.einsum("bd,vd->bv", h[:, -1].astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        return logits, cache
+
+    def prefill_chunk(self, params, batch, cache, pos0):
+        """Chunked prefill: pure recurrent state, so a chunk is just a
+        forward pass continuing from the stored per-slot state (``pos0``
+        is accepted for API uniformity; xLSTM has no positional terms)."""
+        del pos0
+        tokens = batch["tokens"]
+        x = embed_lookup(params["embed"], tokens)
+        h, cache = self._forward(params, x, cache, "prefill_chunk")
         logits = jnp.einsum("bd,vd->bv", h[:, -1].astype(jnp.float32),
                             params["embed"].astype(jnp.float32))
         return logits, cache

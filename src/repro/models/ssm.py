@@ -132,7 +132,13 @@ def mamba2_apply(p, cfg: ModelConfig, x: jax.Array,
         conv_out = jnp.einsum("bwc,wc->bc", hist[:, -width:], w)[:, None]
         new_conv = hist[:, -(width - 1):]
     else:
-        pad = jnp.zeros((bs, width - 1, conv_dim), jnp.float32)
+        # conv history: fresh prefill states are zero-initialised, so using
+        # the stored history (instead of a zero pad) both preserves the
+        # fresh-prefill result and makes chunked prefill an exact
+        # continuation — chunk j's first tokens convolve over chunk j-1's
+        # tail rather than a spurious zero pad.
+        pad = (state["conv"] if state is not None
+               else jnp.zeros((bs, width - 1, conv_dim), jnp.float32))
         xf = jnp.concatenate([pad, xbc.astype(jnp.float32)], axis=1)
         conv_out = sum(xf[:, i: i + s] * w[i][None, None] for i in range(width))
         new_conv = xf[:, -(width - 1):]

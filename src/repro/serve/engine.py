@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.serve.sampling import sample_tokens
 
 
 @dataclasses.dataclass
@@ -100,7 +101,7 @@ class ServeEngine:
 
     def run(self, requests: List[Request], seed: int = 0) -> Dict[int, List[int]]:
         """Continuous batching: slots refill from the queue as they finish."""
-        rng = np.random.default_rng(seed)
+        self._seed = seed
         for r in requests:
             # the cache holds max_len positions and decoding needs >= 1
             if len(r.prompt) > self.ecfg.max_len - 1:
@@ -110,12 +111,11 @@ class ServeEngine:
         queue = list(requests)
         results: Dict[int, List[int]] = {}
         while queue:
-            self._run_generation(queue, results, rng)
+            self._run_generation(queue, results)
         return results
 
     def _run_generation(self, queue: List[Request],
-                        results: Dict[int, List[int]],
-                        rng: np.random.Generator) -> None:
+                        results: Dict[int, List[int]]) -> None:
         ecfg, cfg = self.ecfg, self.cfg
         prefix = cfg.num_prefix_tokens
         slots_n = min(ecfg.slots, len(queue))
@@ -125,7 +125,7 @@ class ServeEngine:
         logits, cache = self._prefill(self.params, batch, ecfg.max_len)
         pos = plen + prefix
         slots: List[Optional[Request]] = list(wave)
-        cur = self._sample(logits, rng)
+        cur = self._sample(logits, slots)
         for i, r in enumerate(slots):
             self._accept(r, int(cur[i]))
 
@@ -152,7 +152,7 @@ class ServeEngine:
                 slogits, scache = self._prefill(self.params, sbatch,
                                                 ecfg.max_len)
                 cache = self._scatter_slot(cache, scache, i)
-                tok = self._sample(slogits, rng)
+                tok = self._sample(slogits, [nxt])
                 self._accept(nxt, int(tok[0]))
                 cur[i] = tok[0]
             if all(r is None for r in slots) or pos >= ecfg.max_len + prefix:
@@ -165,7 +165,7 @@ class ServeEngine:
                                          jnp.asarray(cur)[:, None],
                                          cache, jnp.int32(pos))
             pos += 1
-            cur = self._sample(logits, rng)
+            cur = self._sample(logits, slots)
             for i, r in enumerate(slots):
                 if r is not None:
                     self._accept(r, int(cur[i]))
@@ -175,10 +175,11 @@ class ServeEngine:
         if tok == self.ecfg.eos_id or len(r.out_tokens) >= r.max_new_tokens:
             r.done = True
 
-    def _sample(self, logits, rng) -> np.ndarray:
-        if self.ecfg.temperature <= 0:
-            return np.asarray(jnp.argmax(logits, -1), np.int32)
-        p = jax.nn.softmax(logits / self.ecfg.temperature, axis=-1)
-        p = np.asarray(p, np.float64)
-        p /= p.sum(-1, keepdims=True)
-        return np.array([rng.choice(len(pi), p=pi) for pi in p], np.int32)
+    def _sample(self, logits, slots: List[Optional[Request]]) -> np.ndarray:
+        """Counter-based sampling keyed on (seed, rid, step): a request's
+        sampled stream is independent of slot layout and neighbours, and
+        bit-stable across runs and engines (see ``serve/sampling.py``)."""
+        rows = [None if r is None else (r.rid, len(r.out_tokens))
+                for r in slots]
+        return sample_tokens(logits, rows, seed=getattr(self, "_seed", 0),
+                             temperature=self.ecfg.temperature)

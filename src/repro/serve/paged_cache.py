@@ -1,0 +1,229 @@
+"""Paged KV cache: per-slot block tables over a shared physical pool.
+
+The contiguous engine gives every slot ``max_len`` cache positions up
+front, so one long request dictates the allocation of every short one.
+Here the sequence axis is cut into fixed ``block_size`` blocks, pooled
+across slots, and each slot holds a *block table* — an ordered list of
+physical block ids whose concatenation is that slot's logical cache.
+Blocks are reserved at admission and returned when the request retires,
+so long and short requests share memory with no left-pad contiguity.
+
+Layout falls out of the models' ``cache_axes`` names, family-agnostic:
+
+* leaves with a ``kv_seq`` axis (k/v values, rope'd keys, MLA latents,
+  per-token positions) are stored as ``(..., num_blocks, block_size,
+  ...)`` — the batch axis becomes the physical block id, the sequence
+  axis the in-block offset;
+* leaves without one (SSM/xLSTM recurrent states, encoder-decoder cross
+  attention) are dense per slot, exactly as in the contiguous engine.
+
+Models never see blocks.  For each step the engine *gathers* a dense
+view — ``(rows, V)`` tokens, ``V`` a power-of-two bucket — runs the
+ordinary jitted ``prefill_chunk`` / ``decode_step`` on it, then *commits*
+only the newly written cells back to the pool.  Rows padded past a slot's
+table gather physical block 0, the permanently unallocated **null
+block**: its position leaf is ``-1`` everywhere, which the attention
+mask already treats as empty, so padding needs no extra masking and a
+committed write can never touch it.
+
+Gather and commit are eager ops outside jit — the jitted model functions
+only ever see the dense view, whose shape is bucketed, so the compile
+count stays O(log max_len) regardless of traffic.
+"""
+from __future__ import annotations
+
+import collections
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+def round_up_pow2(n: int) -> int:
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+class BlockAllocator:
+    """Free-list over physical blocks ``1..num_blocks-1`` (0 is null)."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free = collections.deque(range(1, num_blocks))
+        self._used: set = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"pool exhausted: want {n} blocks, {len(self._free)} free")
+        out = [self._free.popleft() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            assert b in self._used, f"double free of block {b}"
+            self._used.discard(b)
+            self._free.append(b)
+
+
+class PagedCache:
+    """Physical pool + block tables + gather/commit cache surgery."""
+
+    def __init__(self, model, cfg, *, slots: int, num_blocks: int,
+                 block_size: int):
+        assert not cfg.ring_cache, "paged cache layers a ring itself"
+        assert block_size & (block_size - 1) == 0, "block_size must be 2^k"
+        assert num_blocks >= 2, "need at least the null block plus one"
+        self.slots, self.num_blocks = slots, num_blocks
+        self.block_size = block_size
+        self.allocator = BlockAllocator(num_blocks)
+        self.tables: List[List[int]] = [[] for _ in range(slots)]
+
+        # one spec per leaf kind: kv leaves indexed by (block, offset),
+        # dense leaves by slot row
+        kv_spec = jax.tree.leaves(model.cache_spec(num_blocks, block_size))
+        dense_spec = jax.tree.leaves(model.cache_spec(slots, block_size))
+        axes = model.cache_axes(1, 1)
+        self._treedef = jax.tree.structure(axes,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+        self._axes = jax.tree.leaves(axes,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        self._pool: List[jnp.ndarray] = []
+        self._is_kv: List[bool] = []
+        self._bi: List[int] = []
+        for ks, ds, ax in zip(kv_spec, dense_spec, self._axes):
+            bi = ax.index("batch")
+            is_kv = "kv_seq" in ax
+            if is_kv:
+                assert ax.index("kv_seq") == bi + 1, ax
+            sp = ks if is_kv else ds
+            init = (jnp.full(sp.shape, -1, sp.dtype)
+                    if sp.dtype == jnp.int32 else jnp.zeros(sp.shape, sp.dtype))
+            self._pool.append(init)
+            self._is_kv.append(is_kv)
+            self._bi.append(bi)
+
+    # -- block accounting ----------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return self.allocator.free_blocks
+
+    def alloc_slot(self, slot: int, n_blocks: int) -> None:
+        assert not self.tables[slot], f"slot {slot} already allocated"
+        self.tables[slot] = self.allocator.alloc(n_blocks)
+
+    def free_slot(self, slot: int) -> None:
+        """Return the slot's blocks and scrub it back to the init state.
+
+        Scrubbing matters: a freed kv block still holds valid-looking
+        positions, and a freed slot row still holds recurrent state.  The
+        pool invariant is that every *free* block has ``pos == -1`` and
+        every *free* slot row is zeroed, so reallocation needs no reset.
+        """
+        blocks = self.tables[slot]
+        self.tables[slot] = []
+        if blocks:
+            barr = np.asarray(blocks, np.int32)
+            for i, leaf in enumerate(self._pool):
+                if self._is_kv[i] and leaf.dtype == jnp.int32:
+                    idx = (slice(None),) * self._bi[i] + (barr,)
+                    self._pool[i] = leaf.at[idx].set(-1)
+            self.allocator.free(blocks)
+        for i, leaf in enumerate(self._pool):
+            if not self._is_kv[i]:
+                idx = (slice(None),) * self._bi[i] + (slot,)
+                fill = -1 if leaf.dtype == jnp.int32 else 0
+                self._pool[i] = leaf.at[idx].set(fill)
+
+    # -- gather / commit -----------------------------------------------
+
+    def view_len(self, tokens_needed: int) -> int:
+        """Bucketed dense-view length covering ``tokens_needed``: a power
+        of two count of blocks, so view shapes (hence compiles) are
+        O(log max_len)."""
+        blocks = round_up_pow2(-(-tokens_needed // self.block_size))
+        return blocks * self.block_size
+
+    def gather(self, slot_ids: Sequence[int], view_tokens: int):
+        """Dense cache view for ``slot_ids`` rows, ``view_tokens`` wide.
+
+        Rows may repeat (padding rows reuse a live slot id for the dense
+        leaves; their writes are simply never committed)."""
+        nb = view_tokens // self.block_size
+        table = np.full((len(slot_ids), nb), NULL_BLOCK, np.int32)
+        for r, s in enumerate(slot_ids):
+            row = self.tables[s][:nb]
+            table[r, :len(row)] = row
+        flat = jnp.asarray(table.reshape(-1))
+        rows = jnp.asarray(np.asarray(slot_ids, np.int32))
+        view = []
+        for leaf, is_kv, bi in zip(self._pool, self._is_kv, self._bi):
+            if is_kv:
+                g = jnp.take(leaf, flat, axis=bi)
+                shape = (g.shape[:bi] + (len(slot_ids), view_tokens)
+                         + g.shape[bi + 2:])
+                view.append(g.reshape(shape))
+            else:
+                view.append(jnp.take(leaf, rows, axis=bi))
+        return jax.tree.unflatten(self._treedef, view)
+
+    def _kv_pool_index(self, slot: int, offsets: np.ndarray):
+        table = self.tables[slot]
+        blocks = np.asarray([table[o // self.block_size] for o in offsets],
+                            np.int32)
+        offs = np.asarray(offsets, np.int32) % self.block_size
+        return jnp.asarray(blocks), jnp.asarray(offs)
+
+    def commit_prefill(self, view, slot: int, pos0: int, chunk: int) -> None:
+        """Write a slot's prefilled cells ``[pos0, pos0+chunk)`` — plus
+        its dense row — from a gathered batch-1 view back to the pool."""
+        offsets = np.arange(pos0, pos0 + chunk)
+        blocks, offs = self._kv_pool_index(slot, offsets)
+        zeros = jnp.zeros(chunk, jnp.int32)
+        vabs = jnp.asarray(offsets, jnp.int32)
+        leaves = jax.tree.leaves(view)
+        for i, (leaf, vleaf) in enumerate(zip(self._pool, leaves)):
+            bi = self._bi[i]
+            if self._is_kv[i]:
+                vals = vleaf[(slice(None),) * bi + (zeros, vabs)]
+                idx = (slice(None),) * bi + (blocks, offs)
+            else:
+                vals = jnp.take(vleaf, 0, axis=bi)
+                idx = (slice(None),) * bi + (slot,)
+            self._pool[i] = leaf.at[idx].set(vals.astype(leaf.dtype))
+
+    def commit_decode(self, view, rows: Sequence[int],
+                      slot_ids: Sequence[int],
+                      positions: Sequence[int]) -> None:
+        """Write each live row's newly decoded cell (``positions[j]`` of
+        slot ``slot_ids[j]``, view row ``rows[j]``) — plus its dense row
+        — back to the pool.  Padding rows are simply not listed."""
+        if not rows:
+            return
+        rarr = jnp.asarray(np.asarray(rows, np.int32))
+        sarr = jnp.asarray(np.asarray(slot_ids, np.int32))
+        pos = np.asarray(positions, np.int64)
+        blocks = np.asarray([self.tables[s][p // self.block_size]
+                             for s, p in zip(slot_ids, pos)], np.int32)
+        offs = jnp.asarray(pos % self.block_size)
+        blocks = jnp.asarray(blocks)
+        vpos = jnp.asarray(pos.astype(np.int32))
+        leaves = jax.tree.leaves(view)
+        for i, (leaf, vleaf) in enumerate(zip(self._pool, leaves)):
+            bi = self._bi[i]
+            if self._is_kv[i]:
+                vals = vleaf[(slice(None),) * bi + (rarr, vpos)]
+                idx = (slice(None),) * bi + (blocks, offs)
+            else:
+                vals = jnp.take(vleaf, rarr, axis=bi)
+                idx = (slice(None),) * bi + (sarr,)
+            self._pool[i] = leaf.at[idx].set(vals.astype(leaf.dtype))

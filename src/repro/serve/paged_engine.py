@@ -1,0 +1,249 @@
+"""Paged serving engine: chunked prefill interleaved with decode over a
+block-pool KV cache, fed by a priority scheduler.
+
+Engine loop (one ``step()``):
+
+1. **retire** — finished slots return their blocks to the pool;
+2. **admit** — the scheduler offers queued requests that fit the free
+   slots/blocks (strict priority, FIFO within a class); each admitted
+   request reserves its worst-case block count so it can always finish;
+3. **prefill tick** — every prefilling slot advances by one chunk: the
+   largest power of two ≤ min(tokens left, ``max_prefill_tokens``).  A
+   long prompt therefore takes several steps and *interleaves* with other
+   slots' decode instead of stalling the batch, and the power-of-two
+   decomposition (13 → 8+4+1) pads nothing, so chunked prefill is
+   bit-identical to one-shot prefill;
+4. **decode tick** — all decoding slots advance one token in a single
+   batched ``decode_step`` with per-row positions, padded to a constant
+   batch of ``slots`` rows (padding rows gather the null block and their
+   writes are never committed).
+
+Every jitted call sees only bucketed shapes — chunk lengths are powers
+of two capped by ``max_prefill_tokens``, dense-view lengths are
+power-of-two block counts, the decode batch is constant — so the compile
+count is O(log max_len) where the reference engine retraced per refill
+length.  ``stats`` records the distinct shapes so tests can pin that
+bound.
+
+Time is measured in engine steps (one ``step()`` = one unit), which
+keeps the traffic harness's latency numbers deterministic and
+platform-independent — see ``docs/serving.md`` for the metric
+definitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.paged_cache import PagedCache
+from repro.serve.sampling import sample_row, sample_tokens
+from repro.serve.scheduler import PriorityScheduler
+
+
+@dataclasses.dataclass
+class PagedRequest:
+    rid: int
+    prompt: np.ndarray                  # (P,) int32
+    max_new_tokens: int = 16
+    priority: int = 0                   # lower = more urgent
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # engine-step timestamps (filled in by the engine)
+    arrival_step: int = 0
+    admitted_step: Optional[int] = None
+    first_token_step: Optional[int] = None
+    finish_step: Optional[int] = None
+
+
+@dataclasses.dataclass
+class PagedEngineConfig:
+    slots: int = 4                      # concurrent sequences
+    block_size: int = 8                 # tokens per cache block (2^k)
+    num_blocks: int = 64                # physical pool incl. null block
+    max_prefill_tokens: int = 16        # per-slot chunk budget per step (2^k)
+    eos_id: int = 1
+    temperature: float = 0.0            # 0 = greedy
+    seed: int = 0                       # sampling seed (counter-based)
+    max_steps: int = 100_000            # drain-loop safety valve
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: PagedRequest
+    pos: int = 0                        # tokens written to the cache so far
+    next_token: Optional[int] = None    # sampled, not yet written
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pos < len(self.req.prompt)
+
+
+class PagedServeEngine:
+    """model: needs prefill_chunk + decode_step (vector positions)."""
+
+    def __init__(self, model, params, cfg: ModelConfig,
+                 ecfg: PagedEngineConfig):
+        assert not cfg.ring_cache, "paged engine: ring cache unsupported"
+        assert cfg.num_prefix_tokens == 0, \
+            "paged engine: prefix tokens (vlm) unsupported"
+        assert ecfg.max_prefill_tokens & (ecfg.max_prefill_tokens - 1) == 0
+        self.model, self.params, self.cfg, self.ecfg = model, params, cfg, ecfg
+        self.cache = PagedCache(model, cfg, slots=ecfg.slots,
+                                num_blocks=ecfg.num_blocks,
+                                block_size=ecfg.block_size)
+        self.scheduler = PriorityScheduler(ecfg.num_blocks - 1,
+                                           ecfg.block_size)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_chunk = jax.jit(model.prefill_chunk)
+        self._slots: List[Optional[_Slot]] = [None] * ecfg.slots
+        self.step_count = 0
+        self.results: Dict[int, List[int]] = {}
+        self.stats = {"prefill_shapes": set(), "decode_shapes": set(),
+                      "steps": 0, "decode_ticks": 0, "prefill_chunks": 0}
+
+    # -- introspection --------------------------------------------------
+
+    @property
+    def live(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Distinct compiled specializations per jitted entry point."""
+        out = {}
+        for name, fn in (("prefill_chunk", self._prefill_chunk),
+                         ("decode_step", self._decode)):
+            size = getattr(fn, "_cache_size", None)
+            out[name] = size() if callable(size) else -1
+        return out
+
+    # -- request intake -------------------------------------------------
+
+    def submit(self, req: PagedRequest) -> None:
+        req.arrival_step = self.step_count
+        if not self.scheduler.submit(req):
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new_tokens} exceeds the cache pool "
+                f"({self.ecfg.num_blocks - 1} blocks of "
+                f"{self.ecfg.block_size})")
+
+    # -- engine loop ----------------------------------------------------
+
+    def step(self) -> None:
+        """One engine step: retire, admit, prefill one chunk per
+        prefilling slot, decode one token for every decoding slot."""
+        self._retire()
+        self._admit()
+        self._prefill_tick()
+        self._decode_tick()
+        self.step_count += 1
+        self.stats["steps"] += 1
+
+    def run(self, requests: List[PagedRequest],
+            seed: Optional[int] = None) -> Dict[int, List[int]]:
+        """Serve ``requests`` to completion (batch mode: all arrive now)."""
+        if seed is not None:
+            self.ecfg.seed = seed
+        for r in requests:
+            self.submit(r)
+        self.drain()
+        return {r.rid: r.out_tokens for r in requests}
+
+    def drain(self) -> None:
+        start = self.step_count
+        while self.scheduler.pending or any(self._slots):
+            if self.step_count - start > self.ecfg.max_steps:
+                raise RuntimeError("engine failed to drain (livelock?)")
+            self.step()
+        self._retire()                   # collect the last finishers
+
+    # -- phases ---------------------------------------------------------
+
+    def _retire(self) -> None:
+        for i, s in enumerate(self._slots):
+            if s is not None and s.req.done:
+                self.results[s.req.rid] = s.req.out_tokens
+                self.cache.free_slot(i)
+                self._slots[i] = None
+
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        admitted = self.scheduler.admit(len(free), self.cache.free_blocks)
+        for req in admitted:
+            i = free.pop(0)
+            self.cache.alloc_slot(i, self.scheduler.reservation(req))
+            req.admitted_step = self.step_count
+            self._slots[i] = _Slot(req)
+
+    def _prefill_tick(self) -> None:
+        for i, s in enumerate(self._slots):
+            if s is None or not s.prefilling:
+                continue
+            remaining = len(s.req.prompt) - s.pos
+            chunk = min(remaining, self.ecfg.max_prefill_tokens)
+            chunk = 1 << (chunk.bit_length() - 1)      # largest 2^k <= chunk
+            view_tokens = self.cache.view_len(s.pos + chunk)
+            batch = {"tokens": jnp.asarray(
+                s.req.prompt[s.pos:s.pos + chunk][None].astype(np.int32))}
+            if self.cfg.family == "encdec" and s.pos == 0:
+                batch["frames"] = jnp.zeros(
+                    (1, self.cfg.encoder_frames, self.cfg.d_model),
+                    jnp.bfloat16)
+            view = self.cache.gather([i], view_tokens)
+            logits, view = self._prefill_chunk(self.params, batch, view,
+                                               jnp.int32(s.pos))
+            self.cache.commit_prefill(view, i, s.pos, chunk)
+            self.stats["prefill_shapes"].add(
+                (chunk, view_tokens, "frames" in batch))
+            self.stats["prefill_chunks"] += 1
+            s.pos += chunk
+            if not s.prefilling:          # prompt complete: first token
+                tok = sample_row(logits[0], seed=self.ecfg.seed,
+                                 rid=s.req.rid, step=0,
+                                 temperature=self.ecfg.temperature)
+                self._accept(s, tok)
+
+    def _decode_tick(self) -> None:
+        live = [(i, s) for i, s in enumerate(self._slots)
+                if s is not None and not s.prefilling and not s.req.done]
+        if not live:
+            return
+        n = self.ecfg.slots
+        slot_ids = np.zeros(n, np.int32)      # padding rows gather slot 0
+        tokens = np.zeros(n, np.int32)
+        positions = np.zeros(n, np.int32)
+        rows = []
+        for r, (i, s) in enumerate(live):
+            slot_ids[r], tokens[r], positions[r] = i, s.next_token, s.pos
+            rows.append((s.req.rid, len(s.req.out_tokens)))
+        view_tokens = self.cache.view_len(int(positions.max()) + 1)
+        view = self.cache.gather(slot_ids.tolist(), view_tokens)
+        logits, view = self._decode(self.params,
+                                    jnp.asarray(tokens)[:, None], view,
+                                    jnp.asarray(positions))
+        self.cache.commit_decode(view, list(range(len(live))),
+                                 [i for i, _ in live],
+                                 [s.pos for _, s in live])
+        self.stats["decode_shapes"].add((n, view_tokens))
+        self.stats["decode_ticks"] += 1
+        rows += [None] * (n - len(rows))
+        sampled = sample_tokens(logits, rows, seed=self.ecfg.seed,
+                                temperature=self.ecfg.temperature)
+        for r, (i, s) in enumerate(live):
+            s.pos += 1                     # the input token is now cached
+            self._accept(s, int(sampled[r]))
+
+    def _accept(self, s: _Slot, tok: int) -> None:
+        req = s.req
+        if req.first_token_step is None:
+            req.first_token_step = self.step_count
+        req.out_tokens.append(tok)
+        s.next_token = tok
+        if tok == self.ecfg.eos_id or len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+            req.finish_step = self.step_count

@@ -1,0 +1,110 @@
+"""Synthetic-traffic harness: Poisson arrivals, mixed length
+distributions, latency/goodput metrics vs offered load.
+
+Time is the engine step (one ``PagedServeEngine.step()`` = one unit), so
+every number here is deterministic for a fixed seed and identical across
+machines — which is what lets ``BENCH_serve.json`` be committed and
+diffed PR-over-PR.  With one decode token per live slot per step, the
+engine's decode capacity is exactly ``slots`` tokens/step, giving the
+goodput numbers an absolute ceiling to read against.
+
+Metrics per (config, offered load) record:
+
+* ``latency`` p50/p99 — finish step minus arrival step, completed
+  requests;
+* ``ttft`` p50/p99 — first-token step minus arrival step (queueing +
+  chunked prefill);
+* ``goodput_tokens_per_step`` — completed requests' output tokens over
+  the drain span;
+* ``utilization`` — goodput over the ``slots`` tokens/step ceiling.
+
+The request mix is bimodal (mostly short prompts, a heavy tail of long
+ones) with uniform output lengths and a priority drawn from a weighted
+set, which is the shape real request logs have and exercises exactly the
+paths this stack exists for: chunked prefill on the tail, admission
+control under memory pressure, priority ordering under queueing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.serve.paged_engine import PagedRequest, PagedServeEngine
+
+
+@dataclasses.dataclass
+class TrafficConfig:
+    num_requests: int = 32
+    offered_load: float = 0.25          # expected arrivals per engine step
+    short_prompt: tuple = (2, 12)       # uniform-int range, inclusive
+    long_prompt: tuple = (24, 56)
+    long_frac: float = 0.25             # fraction of prompts from the tail
+    max_new: tuple = (4, 24)            # uniform-int range, inclusive
+    priorities: tuple = (0, 0, 0, 1)    # drawn uniformly -> 3:1 weighting
+    vocab: int = 256                    # prompt token id range (excl. eos 1)
+    seed: int = 0
+
+
+def poisson_arrivals(n: int, rate: float, rng: np.random.Generator):
+    """Arrival steps for ``n`` requests at ``rate`` arrivals/step."""
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.floor(np.cumsum(gaps)).astype(np.int64)
+
+
+def make_requests(tcfg: TrafficConfig) -> List[PagedRequest]:
+    """The synthetic request mix, arrival steps stamped."""
+    rng = np.random.default_rng(tcfg.seed)
+    arrivals = poisson_arrivals(tcfg.num_requests, tcfg.offered_load, rng)
+    out = []
+    for rid, arr in enumerate(arrivals):
+        lo, hi = (tcfg.long_prompt if rng.random() < tcfg.long_frac
+                  else tcfg.short_prompt)
+        plen = int(rng.integers(lo, hi + 1))
+        prompt = rng.integers(2, tcfg.vocab, size=plen).astype(np.int32)
+        out.append(PagedRequest(
+            rid=rid, prompt=prompt,
+            max_new_tokens=int(rng.integers(tcfg.max_new[0],
+                                            tcfg.max_new[1] + 1)),
+            priority=int(tcfg.priorities[rng.integers(len(tcfg.priorities))]),
+            arrival_step=int(arr)))
+    return out
+
+
+def run_traffic(engine: PagedServeEngine, tcfg: TrafficConfig) -> Dict:
+    """Inject the mix at its arrival steps, drain, report metrics."""
+    requests = make_requests(tcfg)
+    pending = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
+    qi = 0
+    while qi < len(pending) or engine.scheduler.pending or engine.live:
+        while (qi < len(pending)
+               and pending[qi].arrival_step <= engine.step_count):
+            engine.submit(pending[qi])
+            qi += 1
+        if engine.step_count > tcfg.num_requests * engine.ecfg.max_steps:
+            raise RuntimeError("traffic run failed to drain")
+        engine.step()
+    engine._retire()
+
+    done = [r for r in requests if r.done]
+    latency = np.asarray([r.finish_step - r.arrival_step for r in done])
+    ttft = np.asarray([r.first_token_step - r.arrival_step for r in done])
+    out_tokens = sum(len(r.out_tokens) for r in done)
+    steps = max(engine.step_count, 1)
+    pct = lambda a, q: float(np.percentile(a, q)) if len(a) else float("nan")
+    return {
+        "offered_load": tcfg.offered_load,
+        "requests": len(requests),
+        "completed": len(done),
+        "steps": int(engine.step_count),
+        "output_tokens": int(out_tokens),
+        "latency_p50": pct(latency, 50),
+        "latency_p99": pct(latency, 99),
+        "ttft_p50": pct(ttft, 50),
+        "ttft_p99": pct(ttft, 99),
+        "goodput_tokens_per_step": out_tokens / steps,
+        "utilization": out_tokens / steps / engine.ecfg.slots,
+        "prefill_shapes": len(engine.stats["prefill_shapes"]),
+        "decode_shapes": len(engine.stats["decode_shapes"]),
+    }

@@ -1,0 +1,158 @@
+"""Scheduler properties: conservation, FIFO-within-priority, budget
+safety, starvation-freedom.
+
+The hypothesis tests drive ``PriorityScheduler`` with a toy engine loop
+(no model): admitted requests occupy a slot and their reserved blocks
+for a bounded number of steps, then retire.  ``tests/_compat.py`` gates
+the property tests — without hypothesis they skip; the deterministic
+example tests below always run.
+"""
+import dataclasses
+
+import pytest
+
+from _compat import given, settings, st
+from repro.serve.scheduler import PriorityScheduler, blocks_needed
+
+
+@dataclasses.dataclass
+class Toy:
+    rid: int
+    prompt: range                   # only len() matters to the scheduler
+    max_new_tokens: int
+    priority: int = 0
+
+
+def _toy(rid, plen, max_new=4, priority=0):
+    return Toy(rid, range(plen), max_new, priority)
+
+
+def _drain(sched, reqs, slots, blocks, lifetime=lambda r: 2):
+    """Toy engine loop: admit -> hold for ``lifetime`` steps -> retire.
+
+    Returns the admission order.  Raises if the loop livelocks or the
+    scheduler ever over-commits slots or blocks.
+    """
+    accepted = [r for r in reqs if sched.submit(r)]
+    live = []                       # (request, steps_left, reservation)
+    order = []
+    free_slots, free_blocks = slots, blocks
+    for _ in range(10_000):
+        if not live and not sched.pending:
+            break
+        live = [(r, t - 1, n) for r, t, n in live if t > 1]
+        # recompute frees from scratch: the invariant under test
+        held = sum(n for _, _, n in live)
+        free_slots = slots - len(live)
+        free_blocks = blocks - held
+        assert free_slots >= 0 and free_blocks >= 0
+        for r in sched.admit(free_slots, free_blocks):
+            n = sched.reservation(r)
+            live.append((r, lifetime(r), n))
+            order.append(r)
+            free_slots -= 1
+            free_blocks -= n
+            assert free_slots >= 0, "scheduler over-committed slots"
+            assert free_blocks >= 0, "scheduler over-committed blocks"
+    else:
+        raise AssertionError("scheduler failed to drain (starvation?)")
+    return accepted, order
+
+
+# -- deterministic examples ----------------------------------------------
+
+def test_blocks_needed_rounds_up():
+    assert blocks_needed(1, 1, 8) == 1
+    assert blocks_needed(8, 0, 8) == 1
+    assert blocks_needed(8, 1, 8) == 2
+    assert blocks_needed(17, 8, 8) == 4
+
+
+def test_submit_rejects_unservable():
+    s = PriorityScheduler(total_blocks=4, block_size=8)
+    assert not s.submit(_toy(0, plen=40, max_new=1))   # 6 blocks > 4
+    assert s.submit(_toy(1, plen=24, max_new=8))       # exactly 4
+    assert s.pending == 1
+
+
+def test_priority_beats_fifo_across_classes():
+    s = PriorityScheduler(total_blocks=8, block_size=8)
+    s.submit(_toy(0, 4, priority=1))
+    s.submit(_toy(1, 4, priority=0))
+    s.submit(_toy(2, 4, priority=1))
+    got = [r.rid for r in s.admit(free_slots=3, free_blocks=8)]
+    assert got == [1, 0, 2]
+
+
+def test_head_of_line_blocks_no_bypass():
+    """A head request that does not fit blocks everything behind it —
+    the no-bypass rule that makes big requests starvation-free."""
+    s = PriorityScheduler(total_blocks=8, block_size=8)
+    s.submit(_toy(0, 40, max_new=8))    # 6 blocks
+    s.submit(_toy(1, 4))                # 1 block, same class, behind
+    assert s.admit(free_slots=2, free_blocks=5) == []
+    got = [r.rid for r in s.admit(free_slots=2, free_blocks=8)]
+    assert got == [0, 1]
+
+
+def test_big_request_eventually_served():
+    """Under a stream of small competitors, the big head request admits
+    as soon as retirements return enough blocks."""
+    s = PriorityScheduler(total_blocks=6, block_size=8)
+    big = _toy(99, plen=40, max_new=8)          # 6 blocks: whole pool
+    smalls = [_toy(i, 4) for i in range(6)]
+    accepted, order = _drain(s, [big] + smalls, slots=2, blocks=6)
+    assert [r.rid for r in order[:1]] == [99]   # head admits first
+    assert {r.rid for r in order} == {r.rid for r in accepted}
+
+
+# -- properties ----------------------------------------------------------
+
+reqs_strategy = st.lists(
+    st.tuples(st.integers(1, 40),       # prompt length
+              st.integers(1, 16),       # max_new_tokens
+              st.integers(0, 2)),       # priority class
+    min_size=1, max_size=30)
+
+
+@given(reqs=reqs_strategy, slots=st.integers(1, 4),
+       blocks=st.integers(2, 12), seed=st.integers(0, 7))
+@settings(max_examples=60, deadline=None)
+def test_conservation_and_budget(reqs, slots, blocks, seed):
+    """Every accepted request is admitted exactly once, rejects are
+    exactly the never-fit ones, and slots/blocks never go negative
+    (asserted inside the drain loop)."""
+    sched = PriorityScheduler(total_blocks=blocks, block_size=8)
+    toys = [_toy(i, p, m, pr) for i, (p, m, pr) in enumerate(reqs)]
+    lifetime = lambda r: 1 + (r.rid + seed) % 3
+    accepted, order = _drain(sched, toys, slots, blocks, lifetime)
+    assert sorted(r.rid for r in order) == sorted(r.rid for r in accepted)
+    rejected = {t.rid for t in toys} - {r.rid for r in accepted}
+    for t in toys:
+        never_fits = sched.reservation(t) > blocks
+        assert (t.rid in rejected) == never_fits
+
+
+@given(reqs=reqs_strategy, slots=st.integers(1, 4),
+       blocks=st.integers(2, 12))
+@settings(max_examples=60, deadline=None)
+def test_fifo_within_priority(reqs, slots, blocks):
+    """Admission order restricted to one priority class is submit order."""
+    sched = PriorityScheduler(total_blocks=blocks, block_size=8)
+    toys = [_toy(i, p, m, pr) for i, (p, m, pr) in enumerate(reqs)]
+    accepted, order = _drain(sched, toys, slots, blocks)
+    for prio in {t.priority for t in toys}:
+        admitted = [r.rid for r in order if r.priority == prio]
+        submitted = [r.rid for r in accepted if r.priority == prio]
+        assert admitted == submitted
+
+
+@given(reqs=reqs_strategy, blocks=st.integers(2, 12))
+@settings(max_examples=60, deadline=None)
+def test_no_starvation(reqs, blocks):
+    """The drain loop terminates for every mix — the no-bypass rule
+    means a fat head request can always make progress once retirements
+    return its reservation."""
+    sched = PriorityScheduler(total_blocks=blocks, block_size=8)
+    toys = [_toy(i, p, m, pr) for i, (p, m, pr) in enumerate(reqs)]
+    _drain(sched, toys, slots=2, blocks=blocks)   # raises on livelock
