@@ -15,9 +15,23 @@ ceiling, so utilization reads directly as "how busy the serving layer
 keeps the arrays" — the workload-level half of the paper's delivered-
 vs-peak TOPS/W story.
 
+Observability (``repro.obs``) is live on every run:
+
+* the retrace watchdog wraps both jitted entry points with a hard
+  16-shape bound per callsite, so a shape leaking past the power-of-two
+  bucketing fails the bench *while it runs*;
+* ``--metrics-out`` writes one per-request lifecycle record per line
+  (JSONL, stamped with config/offered_load) — the raw records the sweep
+  percentiles are computed from, re-checkable via
+  ``scripts/obs_report.py --check``;
+* ``--trace`` exports a Chrome-trace/Perfetto timeline of the first
+  (config, load) cell's engine-step window (open at
+  https://ui.perfetto.dev).
+
 Usage:
   PYTHONPATH=src python benchmarks/serve_bench.py --out BENCH_serve.json
-  PYTHONPATH=src python benchmarks/serve_bench.py --smoke   # CI-sized
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
+      --metrics-out /tmp/serve_lifecycle.jsonl --trace /tmp/serve_trace.json
 """
 from __future__ import annotations
 
@@ -32,19 +46,27 @@ LOADS = [0.05, 0.1, 0.2, 0.4]
 SMOKE_CONFIGS = ["h2o_danube_1p8b", "whisper_base"]
 SMOKE_LOADS = [0.1, 0.4]
 
+#: live compile-count bound per jitted entry point — the paged engine's
+#: O(log) shape guarantee, asserted by the watchdog during every cell
+WATCHDOG_SHAPE_LIMIT = 16
 
-def run(configs, loads, num_requests, seed):
+
+def run(configs, loads, num_requests, seed, metrics_out=None, trace=None):
     import jax
 
     from repro.configs.base import get_config
     from repro.models.model import build
     from repro.models.params import init_tree
+    from repro.obs import (MetricsRegistry, Observability, RetraceWatchdog,
+                           Tracer)
     from repro.serve.paged_engine import PagedEngineConfig, PagedServeEngine
     from repro.serve.traffic import TrafficConfig, run_traffic
 
     ecfg = PagedEngineConfig(slots=4, block_size=8, num_blocks=64,
                              max_prefill_tokens=16)
     out = []
+    lifecycle_fh = open(metrics_out, "w") if metrics_out else None
+    traced = False
     for name in configs:
         cfg = get_config(name, smoke=True)
         model = build(cfg)
@@ -54,15 +76,41 @@ def run(configs, loads, num_requests, seed):
             tcfg = TrafficConfig(num_requests=num_requests,
                                  offered_load=load, seed=seed,
                                  vocab=cfg.vocab_size)
-            engine = PagedServeEngine(model, params, cfg, ecfg)
+            registry = MetricsRegistry()
+            tracer = Tracer() if (trace and not traced) else None
+            obs = Observability(
+                registry=registry, tracer=tracer,
+                watchdog=RetraceWatchdog(registry,
+                                         default_limit=WATCHDOG_SHAPE_LIMIT))
+            engine = PagedServeEngine(model, params, cfg, ecfg, obs=obs)
             rec = run_traffic(engine, tcfg)
+            obs.watchdog.assert_ok()       # ≤16 shapes held for the whole cell
             sweep.append(rec)
+            if lifecycle_fh is not None:
+                for lrec in engine.lifecycle:
+                    lifecycle_fh.write(json.dumps(
+                        {"config": name, "offered_load": load, **lrec},
+                        sort_keys=True) + "\n")
+            if tracer is not None:
+                tracer.set_thread_name(0, "engine")
+                for slot in range(ecfg.slots):
+                    tracer.set_thread_name(1 + slot, f"slot {slot}")
+                tracer.export(trace)
+                traced = True
+                print(f"wrote {trace} ({len(tracer.events)} events, "
+                      f"{name} load={load})", file=sys.stderr)
             print(f"{name} load={load}: p50={rec['latency_p50']:.0f} "
                   f"p99={rec['latency_p99']:.0f} "
                   f"goodput={rec['goodput_tokens_per_step']:.3f} "
                   f"({rec['completed']}/{rec['requests']} done, "
-                  f"{rec['steps']} steps)", file=sys.stderr)
+                  f"{rec['steps']} steps, watchdog "
+                  f"{obs.watchdog.compiled('prefill_chunk')}/"
+                  f"{obs.watchdog.compiled('decode_step')} shapes)",
+                  file=sys.stderr)
         out.append({"config": name, "family": cfg.family, "sweep": sweep})
+    if lifecycle_fh is not None:
+        lifecycle_fh.close()
+        print(f"wrote {metrics_out}", file=sys.stderr)
     return {
         "benchmark": "serve",
         "schema_version": 1,
@@ -80,17 +128,25 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: fewer configs/loads/requests")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write per-request lifecycle records (JSONL) here")
+    ap.add_argument("--trace", default=None,
+                    help="export a Chrome-trace timeline of the first "
+                         "(config, load) cell here")
     args = ap.parse_args()
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if args.smoke:
-        doc = run(SMOKE_CONFIGS, SMOKE_LOADS, num_requests=10, seed=args.seed)
+        doc = run(SMOKE_CONFIGS, SMOKE_LOADS, num_requests=10, seed=args.seed,
+                  metrics_out=args.metrics_out, trace=args.trace)
     else:
-        doc = run(CONFIGS, LOADS, num_requests=32, seed=args.seed)
+        doc = run(CONFIGS, LOADS, num_requests=32, seed=args.seed,
+                  metrics_out=args.metrics_out, trace=args.trace)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"wrote {args.out} ({time.time() - t0:.1f}s)", file=sys.stderr)
+    print(f"wrote {args.out} ({time.perf_counter() - t0:.1f}s)",
+          file=sys.stderr)
     return 0
 
 

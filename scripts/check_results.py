@@ -1,14 +1,24 @@
 #!/usr/bin/env python
 """Integrity gate for committed result files — run by CI on every push.
 
-Validates two kinds of document, auto-detected by shape:
+Validates four kinds of document, auto-detected by shape:
 
 * ``results/dryrun.json`` — a list of launcher records (the default);
 * ``BENCH_serve.json`` — the serving benchmark, a dict stamped
   ``"benchmark": "serve"``: schema fields per record, a strictly
   increasing offered-load axis per config (a shuffled or duplicated
   sweep means the committed trajectory rotted), percentile sanity
-  (p99 >= p50), and at least three configs covered.
+  (p99 >= p50), and at least three configs covered;
+* ``*.jsonl`` lifecycle telemetry (``serve_bench --metrics-out``): each
+  ``kind: request`` line must carry the full numeric lifecycle schema
+  and satisfy the step-ordering invariants (arrival <= admitted <=
+  first_token <= finish; ttft/latency are exact differences) — these are
+  the raw records the BENCH percentiles are recomputed from, so a
+  malformed line breaks auditability;
+* a Chrome-trace document (dict with ``traceEvents``, from ``--trace``
+  or ``Tracer.export``): complete events need numeric ts/dur >= 0 and
+  integer pid/tid, every event a phase and name — the schema Perfetto
+  actually loads.
 
 Dryrun checks, in order:
 
@@ -154,25 +164,118 @@ def check_serve(doc, min_configs: int = SERVE_MIN_CONFIGS) -> list:
     return errors
 
 
+LIFECYCLE_FIELDS = ("rid", "priority", "prompt_tokens", "max_new_tokens",
+                    "output_tokens", "arrival_step", "admitted_step",
+                    "first_token_step", "finish_step", "queue_wait_steps",
+                    "ttft_steps", "latency_steps")
+
+
+def check_lifecycle(records) -> list:
+    """Per-request lifecycle JSONL: schema + step-ordering invariants."""
+    errors = []
+    n_requests = 0
+    for i, r in enumerate(records):
+        if r.get("kind") != "request":
+            continue
+        n_requests += 1
+        tag = f"lifecycle[{i}] rid={r.get('rid')}"
+        bad = [f for f in LIFECYCLE_FIELDS
+               if not isinstance(r.get(f), (int, float))
+               or isinstance(r.get(f), bool)]
+        if bad:
+            errors.append(f"{tag}: missing/non-numeric {bad}")
+            continue
+        if not (r["arrival_step"] <= r["admitted_step"]
+                <= r["first_token_step"] <= r["finish_step"]):
+            errors.append(f"{tag}: step ordering violated "
+                          f"(arrival {r['arrival_step']} <= admitted "
+                          f"{r['admitted_step']} <= first_token "
+                          f"{r['first_token_step']} <= finish "
+                          f"{r['finish_step']})")
+        if r["queue_wait_steps"] != r["admitted_step"] - r["arrival_step"]:
+            errors.append(f"{tag}: queue_wait_steps is not "
+                          f"admitted - arrival")
+        if r["ttft_steps"] != r["first_token_step"] - r["arrival_step"]:
+            errors.append(f"{tag}: ttft_steps is not first_token - arrival")
+        if r["latency_steps"] != r["finish_step"] - r["arrival_step"]:
+            errors.append(f"{tag}: latency_steps is not finish - arrival")
+        if r["output_tokens"] < 1:
+            errors.append(f"{tag}: finished request with no output tokens")
+        if r["output_tokens"] > r["max_new_tokens"]:
+            errors.append(f"{tag}: output_tokens > max_new_tokens")
+    if n_requests == 0:
+        errors.append("lifecycle file has no 'request' records")
+    return errors
+
+
+def check_trace(doc) -> list:
+    """Chrome-trace JSON: the schema Perfetto/about://tracing loads."""
+    errors = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["trace doc: 'traceEvents' missing or empty"]
+    n_complete = 0
+    for i, e in enumerate(events):
+        tag = f"traceEvents[{i}]"
+        if not isinstance(e.get("ph"), str) or not e["ph"]:
+            errors.append(f"{tag}: missing phase 'ph'")
+            continue
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            errors.append(f"{tag}: missing 'name'")
+        for f in ("pid", "tid"):
+            if not isinstance(e.get(f), int) or isinstance(e.get(f), bool):
+                errors.append(f"{tag}: {f!r} not an int")
+        if e["ph"] == "M":
+            continue                      # metadata events carry no ts
+        if not isinstance(e.get("ts"), (int, float)) or e["ts"] < 0:
+            errors.append(f"{tag}: 'ts' not a non-negative number")
+        if e["ph"] == "X":
+            n_complete += 1
+            if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
+                errors.append(f"{tag}: complete event 'dur' not a "
+                              f"non-negative number")
+    if n_complete == 0:
+        errors.append("trace doc: no complete ('X') span events")
+    return errors
+
+
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
     min_configs = int(sys.argv[2]) if len(sys.argv) > 2 else SERVE_MIN_CONFIGS
-    with open(path) as f:
-        records = json.load(f)
-    if isinstance(records, dict) and records.get("benchmark") == "serve":
-        errors = check_serve(records, min_configs)
-        n = sum(len(c.get("sweep", [])) for c in records.get("configs", []))
-    else:
-        errors = check(records)
+    if path.endswith(".jsonl"):
+        with open(path) as f:
+            records = [json.loads(line) for line in f if line.strip()]
+        errors = check_lifecycle(records)
         n = len(records)
+        kind = "lifecycle"
+    else:
+        with open(path) as f:
+            records = json.load(f)
+        if isinstance(records, dict) and "traceEvents" in records:
+            errors = check_trace(records)
+            n = len(records["traceEvents"])
+            kind = "trace"
+        elif isinstance(records, dict) and records.get("benchmark") == "serve":
+            errors = check_serve(records, min_configs)
+            n = sum(len(c.get("sweep", []))
+                    for c in records.get("configs", []))
+            kind = "serve"
+        else:
+            errors = check(records)
+            n = len(records)
+            kind = "dryrun"
     for e in errors:
         print(f"FAIL: {e}")
     if errors:
         print(f"{len(errors)} violation(s) in {path} ({n} records)")
         return 1
-    if isinstance(records, dict):
+    if kind == "serve":
         print(f"OK: {path} ({len(records['configs'])} configs, "
               f"{n} sweep records)")
+    elif kind == "lifecycle":
+        print(f"OK: {path} ({n} lifecycle records)")
+    elif kind == "trace":
+        print(f"OK: {path} ({n} trace events)")
     else:
         print(f"OK: {path} ({n} records, "
               f"{sum(1 for r in records if r.get('pipeline_stages'))} "

@@ -1,0 +1,131 @@
+#!/usr/bin/env python
+"""Summarize per-request lifecycle telemetry; cross-check BENCH_serve.json.
+
+Reads the JSONL that ``benchmarks/serve_bench.py --metrics-out`` emits
+(one ``kind: request`` record per finished request, stamped with
+``config`` and ``offered_load``) and renders the per-cell summary table:
+latency/TTFT percentiles, queue-wait breakdown, goodput.
+
+``--check BENCH.json`` is the auditability gate the observability layer
+exists for: every percentile in the benchmark document must be *exactly*
+recomputable from the raw lifecycle records (same reduction —
+``repro.serve.traffic.summarize_lifecycle`` — same float result, zero
+tolerance).  A mismatch means the summary and the raw telemetry have
+diverged, i.e. the committed numbers can no longer be audited.  CI runs
+this in the serve-smoke job.
+
+Usage:
+  PYTHONPATH=src python scripts/obs_report.py lifecycle.jsonl
+  PYTHONPATH=src python scripts/obs_report.py lifecycle.jsonl \
+      --check BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import sys
+
+from repro.serve.traffic import summarize_lifecycle
+
+#: sweep-record fields recomputed from raw records and compared exactly
+CHECKED_FIELDS = ("completed", "output_tokens", "latency_p50", "latency_p99",
+                  "ttft_p50", "ttft_p99")
+
+
+def load_lifecycle(path):
+    """Group lifecycle records by (config, offered_load) cell."""
+    cells = collections.defaultdict(list)
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if rec.get("kind") != "request":
+                continue
+            cells[(rec.get("config", "?"),
+                   float(rec.get("offered_load", 0)))].append(rec)
+    return dict(cells)
+
+
+def report(cells) -> list:
+    rows = [("config", "load", "n", "lat p50", "lat p99", "ttft p50",
+             "ttft p99", "queue mean", "tokens")]
+    for (config, load), recs in sorted(cells.items()):
+        s = summarize_lifecycle(recs, slots=1, steps=1, requests=len(recs))
+        queue_mean = (sum(r["queue_wait_steps"] for r in recs)
+                      / max(len(recs), 1))
+        rows.append((config, f"{load:g}", str(len(recs)),
+                     f"{s['latency_p50']:.1f}", f"{s['latency_p99']:.1f}",
+                     f"{s['ttft_p50']:.1f}", f"{s['ttft_p99']:.1f}",
+                     f"{queue_mean:.2f}", str(s["output_tokens"])))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    return ["  ".join(c.rjust(w) for c, w in zip(r, widths)) for r in rows]
+
+
+def check(cells, bench_path) -> list:
+    """Recompute each sweep cell's percentiles from the raw records and
+    compare to the benchmark document, exactly."""
+    with open(bench_path) as f:
+        doc = json.load(f)
+    errors = []
+    n_cells = 0
+    for c in doc.get("configs", []):
+        name = c.get("config", "?")
+        for rec in c.get("sweep", []):
+            load = float(rec["offered_load"])
+            raw = cells.get((name, load))
+            if raw is None:
+                errors.append(f"{name} load={load}: no lifecycle records")
+                continue
+            n_cells += 1
+            got = summarize_lifecycle(
+                raw, slots=doc["engine"]["slots"], steps=rec["steps"],
+                requests=rec["requests"])
+            for field in CHECKED_FIELDS + ("goodput_tokens_per_step",
+                                           "utilization"):
+                if got[field] != rec[field]:
+                    errors.append(
+                        f"{name} load={load}: {field} recomputed "
+                        f"{got[field]!r} != committed {rec[field]!r}")
+    if n_cells == 0:
+        errors.append(f"{bench_path}: no sweep cells found")
+    extra = set(cells) - {(c["config"], float(r["offered_load"]))
+                          for c in doc.get("configs", [])
+                          for r in c.get("sweep", [])}
+    for cell in sorted(extra):
+        errors.append(f"lifecycle cell {cell} absent from {bench_path}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("lifecycle", help="JSONL from serve_bench --metrics-out")
+    ap.add_argument("--check", default=None, metavar="BENCH_JSON",
+                    help="verify this benchmark doc's percentiles are "
+                         "exactly recomputable from the records")
+    args = ap.parse_args()
+
+    cells = load_lifecycle(args.lifecycle)
+    if not cells:
+        print(f"FAIL: {args.lifecycle}: no request records")
+        return 1
+    for line in report(cells):
+        print(line)
+    if args.check:
+        errors = check(cells, args.check)
+        for e in errors:
+            print(f"FAIL: {e}")
+        if errors:
+            print(f"{len(errors)} violation(s): {args.check} percentiles "
+                  f"are NOT recomputable from {args.lifecycle}")
+            return 1
+        print(f"OK: {args.check} percentiles exactly recomputable from "
+              f"{args.lifecycle} ({sum(len(v) for v in cells.values())} "
+              f"records, {len(cells)} cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

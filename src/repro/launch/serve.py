@@ -64,16 +64,18 @@ def main():
                                           temperature=args.temperature))
         reqs = [Request(rid=i, prompt=p, max_new_tokens=args.max_new)
                 for i, p in enumerate(prompts())]
-    t0 = time.time()
+    # perf_counter: step timing must be monotonic (wall-clock is
+    # NTP-skewable); wall time only ever stamps records, never durations
+    t0 = time.perf_counter()
     results = engine.run(reqs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in results.values())
     print(f"{cfg.name}: {len(results)} requests, {n_tok} tokens, "
           f"{dt:.1f}s ({n_tok / dt:.1f} tok/s)")
     if args.paged:
         print(f"  engine steps {engine.step_count}, compiled shapes: "
-              f"prefill {len(engine.stats['prefill_shapes'])}, "
-              f"decode {len(engine.stats['decode_shapes'])}")
+              f"prefill {len(engine.stats.prefill_shapes)}, "
+              f"decode {len(engine.stats.decode_shapes)}")
     for rid in sorted(results):
         print(f"  req {rid}: {results[rid]}")
 

@@ -29,11 +29,22 @@ Time is measured in engine steps (one ``step()`` = one unit), which
 keeps the traffic harness's latency numbers deterministic and
 platform-independent — see ``docs/serving.md`` for the metric
 definitions.
+
+Observability: pass an ``repro.obs.Observability`` to get (1) per-request
+lifecycle records (queue wait, TTFT, latency — appended to
+``engine.lifecycle`` at retire time and the raw material every
+``BENCH_serve.json`` percentile is recomputed from), (2) spans per
+engine step / prefill chunk / decode tick on the obs tracer, (3)
+block-pool occupancy and queue-depth gauges plus admit/reject/defer
+counters on the obs registry, and (4) the retrace watchdog wrapped
+around both jitted entry points so the O(log) compile bound is asserted
+*while serving*, not just in tests.  Without ``obs`` the engine only
+keeps its cheap ``EngineStats``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +84,58 @@ class PagedEngineConfig:
 
 
 @dataclasses.dataclass
+class EngineStats:
+    """Shape/tick accounting the retrace-bound tests and the obs
+    registry both consume.  ``snapshot()`` is JSON-serializable (the
+    shape sets become sorted lists) — the raw sets stay available for
+    in-process asserts."""
+    prefill_shapes: Set[Tuple] = dataclasses.field(default_factory=set)
+    decode_shapes: Set[Tuple] = dataclasses.field(default_factory=set)
+    steps: int = 0
+    prefill_chunks: int = 0
+    decode_ticks: int = 0
+    admitted: int = 0
+    rejected: int = 0
+    deferred_steps: int = 0                 # steps with a free slot but a
+                                            # head-of-line request that
+                                            # didn't fit the free blocks
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "steps": self.steps,
+            "prefill_chunks": self.prefill_chunks,
+            "decode_ticks": self.decode_ticks,
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "deferred_steps": self.deferred_steps,
+            "prefill_shapes": sorted([list(s) for s in self.prefill_shapes]),
+            "decode_shapes": sorted([list(s) for s in self.decode_shapes]),
+            "prefill_shape_count": len(self.prefill_shapes),
+            "decode_shape_count": len(self.decode_shapes),
+        }
+
+
+def lifecycle_record(req: PagedRequest) -> Dict[str, Any]:
+    """One finished request's lifecycle as a flat JSON-safe record —
+    the unit ``--metrics-out`` emits and percentiles recompute from."""
+    return {
+        "kind": "request",
+        "rid": req.rid,
+        "priority": req.priority,
+        "prompt_tokens": int(len(req.prompt)),
+        "max_new_tokens": req.max_new_tokens,
+        "output_tokens": len(req.out_tokens),
+        "arrival_step": req.arrival_step,
+        "admitted_step": req.admitted_step,
+        "first_token_step": req.first_token_step,
+        "finish_step": req.finish_step,
+        "queue_wait_steps": req.admitted_step - req.arrival_step,
+        "ttft_steps": req.first_token_step - req.arrival_step,
+        "latency_steps": req.finish_step - req.arrival_step,
+    }
+
+
+@dataclasses.dataclass
 class _Slot:
     req: PagedRequest
     pos: int = 0                        # tokens written to the cache so far
@@ -87,7 +150,7 @@ class PagedServeEngine:
     """model: needs prefill_chunk + decode_step (vector positions)."""
 
     def __init__(self, model, params, cfg: ModelConfig,
-                 ecfg: PagedEngineConfig):
+                 ecfg: PagedEngineConfig, obs=None):
         assert not cfg.ring_cache, "paged engine: ring cache unsupported"
         assert cfg.num_prefix_tokens == 0, \
             "paged engine: prefix tokens (vlm) unsupported"
@@ -100,11 +163,21 @@ class PagedServeEngine:
                                            ecfg.block_size)
         self._decode = jax.jit(model.decode_step)
         self._prefill_chunk = jax.jit(model.prefill_chunk)
+        self.obs = obs
+        self._tracer = obs.tracer if obs is not None else None
+        self._registry = obs.registry if obs is not None else None
+        if obs is not None and obs.watchdog is not None:
+            limits = self.compile_shape_bounds()
+            self._prefill_chunk = obs.watchdog.watch(
+                self._prefill_chunk, "prefill_chunk",
+                limit=limits["prefill_chunk"])
+            self._decode = obs.watchdog.watch(
+                self._decode, "decode_step", limit=limits["decode_step"])
         self._slots: List[Optional[_Slot]] = [None] * ecfg.slots
         self.step_count = 0
         self.results: Dict[int, List[int]] = {}
-        self.stats = {"prefill_shapes": set(), "decode_shapes": set(),
-                      "steps": 0, "decode_ticks": 0, "prefill_chunks": 0}
+        self.lifecycle: List[Dict[str, Any]] = []
+        self.stats = EngineStats()
 
     # -- introspection --------------------------------------------------
 
@@ -121,28 +194,69 @@ class PagedServeEngine:
             out[name] = size() if callable(size) else -1
         return out
 
+    def compile_shape_bounds(self) -> Dict[str, int]:
+        """Analytic compile-count ceiling per jitted entry point — the
+        O(log) guarantee in numbers: chunk sizes are the powers of two up
+        to ``max_prefill_tokens``, view lengths are power-of-two block
+        counts up to the pool, the decode batch is constant.  The
+        watchdog asserts these bounds live (a smoke harness may pin a
+        tighter empirical bound via ``RetraceWatchdog(default_limit=…)``).
+        """
+        chunk_kinds = self.ecfg.max_prefill_tokens.bit_length()
+        usable = self.ecfg.num_blocks - 1          # pool minus null block
+        view_kinds = (1 << max(usable - 1, 1).bit_length()).bit_length()
+        encdec = 2 if self.cfg.family == "encdec" else 1
+        return {"prefill_chunk": chunk_kinds * view_kinds * encdec,
+                "decode_step": view_kinds}
+
     # -- request intake -------------------------------------------------
 
     def submit(self, req: PagedRequest) -> None:
         req.arrival_step = self.step_count
         if not self.scheduler.submit(req):
+            self.stats.rejected += 1
+            if self._registry is not None:
+                self._registry.counter("serve.rejected_requests")
             raise ValueError(
                 f"request {req.rid}: prompt {len(req.prompt)} + max_new "
                 f"{req.max_new_tokens} exceeds the cache pool "
                 f"({self.ecfg.num_blocks - 1} blocks of "
                 f"{self.ecfg.block_size})")
+        if self._registry is not None:
+            self._registry.counter("serve.submitted_requests")
+        if self._tracer is not None:
+            self._tracer.instant("submit", rid=req.rid,
+                                 prompt_tokens=int(len(req.prompt)),
+                                 priority=req.priority,
+                                 step=self.step_count)
 
     # -- engine loop ----------------------------------------------------
 
     def step(self) -> None:
         """One engine step: retire, admit, prefill one chunk per
         prefilling slot, decode one token for every decoding slot."""
-        self._retire()
-        self._admit()
-        self._prefill_tick()
-        self._decode_tick()
+        if self._tracer is not None:
+            with self._tracer.span("engine_step", step=self.step_count):
+                self._retire()
+                self._admit()
+                self._prefill_tick()
+                self._decode_tick()
+        else:
+            self._retire()
+            self._admit()
+            self._prefill_tick()
+            self._decode_tick()
         self.step_count += 1
-        self.stats["steps"] += 1
+        self.stats.steps += 1
+        if self._registry is not None:
+            used = self.ecfg.num_blocks - 1 - self.cache.free_blocks
+            self._registry.gauge("serve.blocks_in_use", used)
+            self._registry.observe("serve.blocks_in_use_per_step", used)
+            self._registry.gauge("serve.queue_depth", self.scheduler.pending)
+            self._registry.gauge("serve.live_slots", self.live)
+        if self._tracer is not None:
+            used = self.ecfg.num_blocks - 1 - self.cache.free_blocks
+            self._tracer.counter("blocks_in_use", used)
 
     def run(self, requests: List[PagedRequest],
             seed: Optional[int] = None) -> Dict[int, List[int]]:
@@ -168,6 +282,18 @@ class PagedServeEngine:
         for i, s in enumerate(self._slots):
             if s is not None and s.req.done:
                 self.results[s.req.rid] = s.req.out_tokens
+                self.lifecycle.append(lifecycle_record(s.req))
+                if self._registry is not None:
+                    self._registry.counter("serve.completed_requests")
+                    self._registry.counter("serve.output_tokens",
+                                           len(s.req.out_tokens))
+                    rec = self.lifecycle[-1]
+                    for m in ("queue_wait_steps", "ttft_steps",
+                              "latency_steps"):
+                        self._registry.observe(f"serve.{m}", rec[m])
+                if self._tracer is not None:
+                    self._tracer.instant("retire", rid=s.req.rid, slot=i,
+                                         output_tokens=len(s.req.out_tokens))
                 self.cache.free_slot(i)
                 self._slots[i] = None
 
@@ -179,6 +305,19 @@ class PagedServeEngine:
             self.cache.alloc_slot(i, self.scheduler.reservation(req))
             req.admitted_step = self.step_count
             self._slots[i] = _Slot(req)
+            if self._tracer is not None:
+                self._tracer.instant("admit", rid=req.rid, slot=i,
+                                     queue_wait=req.admitted_step
+                                     - req.arrival_step)
+        self.stats.admitted += len(admitted)
+        if self._registry is not None and admitted:
+            self._registry.counter("serve.admitted_requests", len(admitted))
+        # a leftover free slot with a queue behind it means the head-of-
+        # line request didn't fit the free blocks: a deferral step
+        if free and self.scheduler.pending:
+            self.stats.deferred_steps += 1
+            if self._registry is not None:
+                self._registry.counter("serve.deferred_steps")
 
     def _prefill_tick(self) -> None:
         for i, s in enumerate(self._slots):
@@ -195,12 +334,21 @@ class PagedServeEngine:
                     (1, self.cfg.encoder_frames, self.cfg.d_model),
                     jnp.bfloat16)
             view = self.cache.gather([i], view_tokens)
-            logits, view = self._prefill_chunk(self.params, batch, view,
-                                               jnp.int32(s.pos))
+            if self._tracer is not None:
+                with self._tracer.span("prefill_chunk", tid=1 + i,
+                                       rid=s.req.rid, chunk=chunk,
+                                       view=view_tokens, pos=s.pos):
+                    logits, view = self._prefill_chunk(self.params, batch,
+                                                       view, jnp.int32(s.pos))
+            else:
+                logits, view = self._prefill_chunk(self.params, batch, view,
+                                                   jnp.int32(s.pos))
             self.cache.commit_prefill(view, i, s.pos, chunk)
-            self.stats["prefill_shapes"].add(
+            self.stats.prefill_shapes.add(
                 (chunk, view_tokens, "frames" in batch))
-            self.stats["prefill_chunks"] += 1
+            self.stats.prefill_chunks += 1
+            if self._registry is not None:
+                self._registry.counter("serve.prefill_tokens", chunk)
             s.pos += chunk
             if not s.prefilling:          # prompt complete: first token
                 tok = sample_row(logits[0], seed=self.ecfg.seed,
@@ -223,14 +371,23 @@ class PagedServeEngine:
             rows.append((s.req.rid, len(s.req.out_tokens)))
         view_tokens = self.cache.view_len(int(positions.max()) + 1)
         view = self.cache.gather(slot_ids.tolist(), view_tokens)
-        logits, view = self._decode(self.params,
-                                    jnp.asarray(tokens)[:, None], view,
-                                    jnp.asarray(positions))
+        if self._tracer is not None:
+            with self._tracer.span("decode_tick", rows=len(live),
+                                   view=view_tokens):
+                logits, view = self._decode(self.params,
+                                            jnp.asarray(tokens)[:, None],
+                                            view, jnp.asarray(positions))
+        else:
+            logits, view = self._decode(self.params,
+                                        jnp.asarray(tokens)[:, None], view,
+                                        jnp.asarray(positions))
         self.cache.commit_decode(view, list(range(len(live))),
                                  [i for i, _ in live],
                                  [s.pos for _, s in live])
-        self.stats["decode_shapes"].add((n, view_tokens))
-        self.stats["decode_ticks"] += 1
+        self.stats.decode_shapes.add((n, view_tokens))
+        self.stats.decode_ticks += 1
+        if self._registry is not None:
+            self._registry.counter("serve.decode_tokens", len(live))
         rows += [None] * (n - len(rows))
         sampled = sample_tokens(logits, rows, seed=self.ecfg.seed,
                                 temperature=self.ecfg.temperature)

@@ -72,6 +72,35 @@ def make_requests(tcfg: TrafficConfig) -> List[PagedRequest]:
     return out
 
 
+def summarize_lifecycle(records, *, slots: int, steps: int,
+                        requests: int) -> Dict:
+    """Reduce per-request lifecycle records to the sweep-record metrics.
+
+    This is THE percentile computation — ``run_traffic`` calls it on the
+    engine's lifecycle list, and ``scripts/obs_report.py --check``
+    re-runs it on the ``--metrics-out`` JSONL to prove the committed
+    ``BENCH_serve.json`` numbers are exactly recomputable from the raw
+    records.
+    """
+    latency = np.asarray([r["latency_steps"] for r in records])
+    ttft = np.asarray([r["ttft_steps"] for r in records])
+    out_tokens = sum(r["output_tokens"] for r in records)
+    denom = max(steps, 1)
+    pct = lambda a, q: float(np.percentile(a, q)) if len(a) else float("nan")
+    return {
+        "requests": requests,
+        "completed": len(records),
+        "steps": int(steps),
+        "output_tokens": int(out_tokens),
+        "latency_p50": pct(latency, 50),
+        "latency_p99": pct(latency, 99),
+        "ttft_p50": pct(ttft, 50),
+        "ttft_p99": pct(ttft, 99),
+        "goodput_tokens_per_step": out_tokens / denom,
+        "utilization": out_tokens / denom / slots,
+    }
+
+
 def run_traffic(engine: PagedServeEngine, tcfg: TrafficConfig) -> Dict:
     """Inject the mix at its arrival steps, drain, report metrics."""
     requests = make_requests(tcfg)
@@ -87,24 +116,10 @@ def run_traffic(engine: PagedServeEngine, tcfg: TrafficConfig) -> Dict:
         engine.step()
     engine._retire()
 
-    done = [r for r in requests if r.done]
-    latency = np.asarray([r.finish_step - r.arrival_step for r in done])
-    ttft = np.asarray([r.first_token_step - r.arrival_step for r in done])
-    out_tokens = sum(len(r.out_tokens) for r in done)
-    steps = max(engine.step_count, 1)
-    pct = lambda a, q: float(np.percentile(a, q)) if len(a) else float("nan")
-    return {
-        "offered_load": tcfg.offered_load,
-        "requests": len(requests),
-        "completed": len(done),
-        "steps": int(engine.step_count),
-        "output_tokens": int(out_tokens),
-        "latency_p50": pct(latency, 50),
-        "latency_p99": pct(latency, 99),
-        "ttft_p50": pct(ttft, 50),
-        "ttft_p99": pct(ttft, 99),
-        "goodput_tokens_per_step": out_tokens / steps,
-        "utilization": out_tokens / steps / engine.ecfg.slots,
-        "prefill_shapes": len(engine.stats["prefill_shapes"]),
-        "decode_shapes": len(engine.stats["decode_shapes"]),
-    }
+    rec = {"offered_load": tcfg.offered_load,
+           **summarize_lifecycle(engine.lifecycle, slots=engine.ecfg.slots,
+                                 steps=engine.step_count,
+                                 requests=len(requests)),
+           "prefill_shapes": len(engine.stats.prefill_shapes),
+           "decode_shapes": len(engine.stats.decode_shapes)}
+    return rec

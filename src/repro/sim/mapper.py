@@ -392,6 +392,95 @@ def map_matmul(m: float, k: int, n: int, engine: EngineConfig = None, *,
 
 
 @dataclasses.dataclass(frozen=True)
+class RoundSlice:
+    """One round of ``round_timeline``: where its compute and RRAM
+    programming sit on the wall clock, in engine cycles."""
+    index: int
+    compute_start: float
+    compute_cycles: float
+    program_start: float
+    program_cycles: float
+    #: program time the buffering mode could not hide (== this round's
+    #: contribution to MatmulReport.reprogram_cycles at count=1)
+    exposed_cycles: float
+
+    @property
+    def compute_end(self) -> float:
+        return self.compute_start + self.compute_cycles
+
+
+def round_timeline(m: float, k: int, n: int, engine: EngineConfig = None, *,
+                   stationary: bool = True) -> List[RoundSlice]:
+    """The round walk of one pass (count=1) as an explicit timeline.
+
+    ``map_matmul`` accounts the overlap recurrence
+    ``start_{r+1} = start_r + c_r + max(0, p_{r+1} − c_r)`` in closed
+    form; this renders the same walk round by round so engine schedules
+    can be *looked at* (``repro.obs.trace.round_walk_chrome_trace``
+    turns the slices into a Perfetto timeline).  Semantics mirror
+    ``map_matmul`` exactly: a stationary matmul's round-0 tiles are
+    preloaded (initial residency, not a stall); serial mode exposes
+    every later round's program time in full; double-buffered mode
+    programs round r+1 into the shadow plane while round r computes and
+    exposes only the ``max(0, p − c)`` tail.  Consistency with
+    ``MatmulReport`` (count=1 compute/reprogram cycle totals) is pinned
+    by ``tests/test_obs.py``.
+    """
+    engine = engine or EngineConfig()
+    am = engine.array_model
+    df = get_dataflow(engine.dataflow)
+    A = engine.arrays
+    classes = sorted(_tile_classes(k, n),
+                     key=lambda c: (df.mult_cycles(m, c[0], c[1]),
+                                    c[0], c[1]),
+                     reverse=True)
+    T = sum(c[2] for c in classes)
+    if T == 0 or m <= 0:
+        return []
+    bounds = []
+    cum = 0
+    for kt, nw, cnt in classes:
+        bounds.append((cum, cum + cnt, kt, nw))
+        cum += cnt
+
+    def _class_at(idx: int) -> Tuple[int, int]:
+        for lo, hi, kt, nw in bounds:
+            if lo <= idx < hi:
+                return kt, nw
+        return bounds[-1][2], bounds[-1][3]
+
+    rounds = math.ceil(T / A)
+    apb, ports = engine.arrays_per_bank, engine.write_ports
+    free = engine.free_programming
+    # round 0 of a stationary matmul is initial residency, never a stall
+    preloaded = stationary and not free
+    out: List[RoundSlice] = []
+    t = 0.0
+    prev_c_start = 0.0
+    for r in range(rounds):
+        lo, hi = r * A, min(T, (r + 1) * A)
+        kt0, nw0 = _class_at(lo)
+        c_r = df.mult_cycles(m, kt0, nw0)
+        p_r = 0.0
+        if not free and not (r == 0 and preloaded):
+            p_r = _round_program_cycles(bounds, lo, hi, apb, ports, am)
+        if engine.double_buffered:
+            # round r's writes start with round r−1's compute (round 0
+            # has nothing to hide behind)
+            p_start = prev_c_start if r > 0 else 0.0
+            exposed = max(0.0, p_r - (t - p_start)) if p_r else 0.0
+            c_start = t + exposed
+        else:
+            p_start = t
+            exposed = p_r
+            c_start = t + p_r
+        out.append(RoundSlice(r, c_start, c_r, p_start, p_r, exposed))
+        prev_c_start = c_start
+        t = c_start + c_r
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkloadReport:
     """A whole workload (matmul inventory) mapped onto one engine."""
     engine: EngineConfig

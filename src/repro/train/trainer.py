@@ -30,7 +30,7 @@ class TrainerConfig:
     keep: int = 3
     log_every: int = 10
     seed: int = 0
-    metrics_path: Optional[str] = None   # JSONL telemetry (utils.metrics)
+    metrics_path: Optional[str] = None   # JSONL telemetry (repro.obs)
 
 
 def train(model, cfg: ModelConfig, shape: ShapeConfig,
@@ -38,7 +38,7 @@ def train(model, cfg: ModelConfig, shape: ShapeConfig,
           injector: Optional[FailureInjector] = None,
           step_fn=None, state=None,
           on_metrics: Optional[Callable[[int, Dict], None]] = None,
-          mesh=None):
+          mesh=None, obs=None):
     """Returns (state, history).  Restartable: call again after a crash and
     it resumes from the newest checkpoint.
 
@@ -83,9 +83,15 @@ def train(model, cfg: ModelConfig, shape: ShapeConfig,
             if latest is not None:
                 state = ckpt.restore(tcfg.ckpt_dir, latest, state)
                 start = latest
-    from repro.utils.metrics import MetricsLogger
+    import contextlib
+
+    from repro.obs import JsonlLogger, MetricsRegistry
     monitor = StragglerMonitor()
-    logger = MetricsLogger(tcfg.metrics_path)
+    logger = JsonlLogger(tcfg.metrics_path)
+    registry = obs.registry if obs is not None else MetricsRegistry()
+    tracer = obs.tracer if obs is not None else None
+    _span = (tracer.span if tracer is not None
+             else lambda *a, **kw: contextlib.nullcontext())
     history = []
     pending = None
     for step in range(start, tcfg.total_steps):
@@ -93,25 +99,40 @@ def train(model, cfg: ModelConfig, shape: ShapeConfig,
             injector.maybe_fail(step)
         batch = {k: jax.numpy.asarray(v)
                  for k, v in batch_at(dcfg, step).items()}
-        t0 = time.time()
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        dt = time.time() - t0
+        # perf_counter for the duration (wall-clock is NTP-skewable and
+        # can run backwards mid-step); the logger stamps the one wall
+        # timestamp each record keeps for cross-host alignment
+        t0 = time.perf_counter()
+        with _span("train_step", step=step + 1):
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
         straggler = monitor.observe(step, dt)
         logger.log(step + 1, loss=loss, dt=dt,
                    grad_norm=metrics.get("grad_norm", 0.0),
-                   straggler=int(straggler))
+                   straggler=straggler)
+        registry.counter("train.steps")
+        registry.observe("train.step_time_s", dt)
+        registry.gauge("train.loss", loss)
+        if straggler:
+            registry.counter("train.straggler_events")
+            if tracer is not None:
+                tracer.instant("straggler", step=step + 1, dt=dt)
         history.append({"step": step + 1, "loss": loss, "dt": dt})
         if on_metrics:
             on_metrics(step + 1, metrics)
         if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
-            if pending is not None:
-                pending.join()
-            pending = ckpt.save(tcfg.ckpt_dir, step + 1, state,
-                                keep=tcfg.keep, blocking=False)
+            with _span("checkpoint", step=step + 1):
+                if pending is not None:
+                    pending.join()
+                pending = ckpt.save(tcfg.ckpt_dir, step + 1, state,
+                                    keep=tcfg.keep, blocking=False)
+            registry.counter("train.checkpoints")
     if pending is not None:
         pending.join()
     if tcfg.ckpt_dir and tcfg.total_steps > start:
-        ckpt.save(tcfg.ckpt_dir, tcfg.total_steps, state, keep=tcfg.keep)
+        with _span("checkpoint", step=tcfg.total_steps, final=True):
+            ckpt.save(tcfg.ckpt_dir, tcfg.total_steps, state, keep=tcfg.keep)
+        registry.counter("train.checkpoints")
     logger.close()
     return state, history

@@ -1,61 +1,15 @@
-"""Telemetry: append-only JSONL metrics writer + aggregation helpers.
+"""Thin compatibility shim over ``repro.obs.registry``.
 
-Production launchers tail these files per host; the straggler monitor and
-dashboards read the same records.  Append-only + line-atomic writes keep it
-crash-safe (a torn final line is skipped on read).
+The JSONL step logger grew into the unified observability layer
+(``repro.obs``): labeled counter/gauge/histogram series, span tracing
+with Chrome-trace export, and the retrace watchdog.  Existing imports
+(``MetricsLogger``, ``read_metrics``, ``step_time_summary``) keep
+working — ``MetricsLogger`` *is* ``repro.obs.registry.JsonlLogger`` —
+but new code should import from ``repro.obs`` directly.
 """
 from __future__ import annotations
 
-import json
-import os
-import time
-from typing import Any, Dict, Iterator, List, Optional
+from repro.obs.registry import (JsonlLogger as MetricsLogger, read_metrics,
+                                step_time_summary)
 
-
-class MetricsLogger:
-    def __init__(self, path: Optional[str], host_id: int = 0):
-        self.path = path
-        self.host_id = host_id
-        self._fh = None
-        if path:
-            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-            self._fh = open(path, "a", buffering=1)
-
-    def log(self, step: int, **metrics: Any):
-        if self._fh is None:
-            return
-        rec = {"t": time.time(), "host": self.host_id, "step": step}
-        for k, v in metrics.items():
-            try:
-                rec[k] = float(v)
-            except (TypeError, ValueError):
-                rec[k] = str(v)
-        self._fh.write(json.dumps(rec) + "\n")
-
-    def close(self):
-        if self._fh:
-            self._fh.close()
-            self._fh = None
-
-
-def read_metrics(path: str) -> List[Dict[str, Any]]:
-    out = []
-    if not os.path.exists(path):
-        return out
-    with open(path) as f:
-        for line in f:
-            try:
-                out.append(json.loads(line))
-            except json.JSONDecodeError:
-                continue  # torn tail line after a crash
-    return out
-
-
-def step_time_summary(path: str) -> Dict[str, float]:
-    recs = [r for r in read_metrics(path) if "dt" in r]
-    if not recs:
-        return {}
-    dts = sorted(r["dt"] for r in recs)
-    n = len(dts)
-    return {"n": n, "p50": dts[n // 2], "p95": dts[int(n * 0.95)],
-            "max": dts[-1], "mean": sum(dts) / n}
+__all__ = ["MetricsLogger", "read_metrics", "step_time_summary"]

@@ -69,7 +69,7 @@ def test_paged_matches_contiguous_greedy(stack):
     assert got == ref
     # 5 requests through 2 slots: at least one admission happened after
     # the engine had already started stepping (a true mid-stream refill)
-    assert eng.stats["decode_ticks"] > 0
+    assert eng.stats.decode_ticks > 0
     assert max(r.admitted_step for r in reqs) > 0
 
 
@@ -141,13 +141,13 @@ def test_paged_retrace_bound():
     eng.run(reqs)
     chunk_kinds = 4                         # 1, 2, 4, 8
     view_kinds = 4                          # 8, 16, 32, 64 tokens
-    assert len(eng.stats["prefill_shapes"]) <= chunk_kinds * view_kinds
-    assert len(eng.stats["decode_shapes"]) <= view_kinds
+    assert len(eng.stats.prefill_shapes) <= chunk_kinds * view_kinds
+    assert len(eng.stats.decode_shapes) <= view_kinds
     counts = eng.compile_counts()
     if counts["prefill_chunk"] >= 0:        # _cache_size available
         assert counts["prefill_chunk"] <= chunk_kinds * view_kinds
         assert counts["decode_step"] <= view_kinds
-    assert len(eng.stats["prefill_shapes"]) < len(set(lengths))
+    assert len(eng.stats.prefill_shapes) < len(set(lengths))
 
 
 def test_paged_admission_defers_until_blocks_free():
