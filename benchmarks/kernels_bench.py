@@ -1,8 +1,30 @@
-"""Kernel micro-benchmarks (CPU timings of the jnp fast paths + interpret-
-mode Pallas correctness cost; TPU wall-clock is out of scope for this
-container — the roofline tables carry the TPU projections)."""
+"""Fused-vs-unfused kernel sweep over real config-zoo layer shapes.
+
+Two measurements per cell, because this container has no TPU:
+
+  * ``bytes_*`` — the analytic HBM-traffic model (``repro.kernels.traffic``)
+    evaluated at the config's FULL layer shape.  This is the number the
+    fusion exists to improve and the one ``scripts/check_results.py``
+    gates on (fused <= unfused on every cell, no waivers).
+  * ``cpu_*_us`` — wall-clock of the interpret-mode Pallas programs at a
+    small PROXY shape (full shapes are infeasible under the interpreter).
+    Interpret mode executes the grid as a Python loop, so these timings
+    measure schedule overhead, not MXU throughput; cells where the fused
+    interpreter loses carry an explicit ``waiver`` saying so.
+
+Matmul/MLP bytes use the weight-stationary schedule (weights pre-encoded
+as int8 codes via ``ops.prepare_bp_weight`` — OISMA's weights-programmed-
+into-the-array story); the CPU timing column runs the drop-in real-weight
+path so both operands' encodes are timed.
+
+Output: ``BENCH_kernels.json`` (``--out``), schema-validated by
+``scripts/check_results.py <file> <min_cells>``, including a snapshot of
+the ``kernels.*`` metrics family recorded during the sweep.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import List, Tuple
 
@@ -10,19 +32,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import get_config
 from repro.core import bp_matmul as bpm
+from repro.kernels import attention as kattn
+from repro.kernels import metrics as kmetrics
+from repro.kernels import ops as kops
+from repro.kernels import traffic
+from repro.obs.registry import MetricsRegistry
+
+# (config, tokens M, kv-seq S, batch B) — M covers a prefill chunk, S a
+# mid-length decode cache; bytes scale linearly so ratios are shape-true.
+SWEEP = ["gemma3_12b", "h2o_danube_1p8b", "qwen2_72b", "minicpm3_4b",
+         "granite_moe_1b", "paligemma_3b"]
+QUICK_SWEEP = SWEEP[:2]
+M_TOKENS = 256
+S_KV = 4096
+B_DECODE = 8
+
+CPU_WAIVER = ("interpret-mode CPU proxy: the Pallas grid runs as a Python "
+              "loop, so per-step overhead dominates; the gated comparison "
+              "is bytes_fused <= bytes_unfused (TPU roofline)")
 
 
-def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+def _time(fn, *args, iters: int = 3) -> float:
+    # warm up exactly once (compile + first run), reusing the result
+    out = fn(*args)
+    jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
     t0 = time.perf_counter()
     for _ in range(iters):
-        jax.block_until_ready(fn(*args))
+        out = fn(*args)
+        jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
     return (time.perf_counter() - t0) / iters * 1e6
 
 
 def bp_matmul_impls(n: int = 256) -> Tuple[List[str], dict]:
+    """Legacy jnp fast-path comparison (kept for the dryrun tables)."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.random((n, n), np.float32))
     y = jnp.asarray(rng.random((n, n), np.float32))
@@ -38,3 +82,133 @@ def bp_matmul_impls(n: int = 256) -> Tuple[List[str], dict]:
                     f"{t / t_base:.1f}x_vs_bf16")
         out[impl] = t
     return rows, out
+
+
+def _proxy(dim: int, cap: int = 256) -> int:
+    return min(dim, cap)
+
+
+def _cell(kernel, config, shape, proxy, bf, bu, tf, tu):
+    waiver = None if tf <= tu else CPU_WAIVER
+    return {
+        "kernel": kernel, "config": config, "shape": shape,
+        "proxy_shape": proxy,
+        "bytes_fused": bf["total"], "bytes_unfused": bu["total"],
+        "bytes_ratio": round(bu["total"] / bf["total"], 3),
+        "terms_fused": bf["terms"],
+        "cpu_fused_us": round(tf, 1), "cpu_unfused_us": round(tu, 1),
+        "waiver": waiver,
+    }
+
+
+def _matmul_cell(name, cfg, rng, iters):
+    m, k = M_TOKENS, cfg.d_model
+    n = cfg.num_heads * cfg.head_dim
+    bf = traffic.matmul_traffic_fused(m, k, n, weights_coded=True)
+    bu = traffic.matmul_traffic_unfused(m, k, n)
+    pm, pk, pn = _proxy(m, 64), _proxy(k), _proxy(n)
+    x = jnp.asarray(rng.normal(size=(pm, pk)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(pk, pn)), jnp.float32)
+    tf = _time(lambda: kops.oisma_matmul(x, y, interpret=True), iters=iters)
+    tu = _time(lambda: kops.oisma_matmul(x, y, impl="unfused",
+                                         interpret=True), iters=iters)
+    return _cell("matmul_qkv_proj", name, {"m": m, "k": k, "n": n},
+                 {"m": pm, "k": pk, "n": pn}, bf, bu, tf, tu)
+
+
+def _mlp_cell(name, cfg, rng, iters):
+    m, k, f = M_TOKENS, cfg.d_model, cfg.d_ff
+    bf = traffic.mlp_traffic_fused(m, k, f, weights_coded=True)
+    bu = traffic.mlp_traffic_unfused(m, k, f)
+    pm, pk, pf = _proxy(m, 64), _proxy(k), _proxy(f)
+    x = jnp.asarray(rng.normal(size=(pm, pk)), jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(pk, pf)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(pk, pf)), jnp.float32)
+    tf = _time(lambda: kops.oisma_mlp(x, wu, wg, interpret=True), iters=iters)
+
+    def unfused():
+        u = kops.oisma_matmul(x, wu, impl="unfused", interpret=True)
+        g = kops.oisma_matmul(x, wg, impl="unfused", interpret=True)
+        return jax.nn.silu(g) * u
+
+    tu = _time(unfused, iters=iters)
+    return _cell("mlp_silu_gate", name, {"m": m, "k": k, "f": f},
+                 {"m": pm, "k": pk, "f": pf}, bf, bu, tf, tu)
+
+
+def _attention_cell(name, cfg, rng, iters):
+    kh, d = cfg.num_kv_heads, cfg.head_dim
+    g = cfg.num_heads // kh
+    shape = {"b": B_DECODE, "s": S_KV, "kh": kh, "g": g, "d": d}
+    t = traffic.decode_attention_traffic(B_DECODE, S_KV, kh, g, d)
+    bf, bu = t["fused"], t["unfused"]
+    kmetrics.record_call("bp8_decode_attention",
+                         bytes_saved=bu["total"] - bf["total"])
+    pb, ps, pkh, pd = 2, 64, min(kh, 2), _proxy(d, 64)
+    kv = jnp.asarray(rng.normal(size=(pb, ps, pkh, pd)), jnp.float32)
+    kc, ks = kattn.quantize_kv(kv)
+    vc, vs = kattn.quantize_kv(kv[..., ::-1])
+    q = jnp.asarray(rng.normal(size=(pb, pkh, g, pd)), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(ps), (pb, ps))
+    q_pos = jnp.full((pb,), ps - 1, jnp.int32)
+    fused = jax.jit(lambda *a: kattn.bp8_decode_attention(
+        *a, None, chunk=32, interpret=True))
+    unfused = jax.jit(lambda *a: kattn.bp8_decode_attention_ref(*a, None))
+    args = (q, kc, ks, vc, vs, kv_pos, q_pos)
+    tf = _time(fused, *args, iters=iters)
+    tu = _time(unfused, *args, iters=iters)
+    return _cell("decode_attention_bp8kv", name, shape,
+                 {"b": pb, "s": ps, "kh": pkh, "g": g, "d": pd}, bf, bu,
+                 tf, tu)
+
+
+def run_sweep(configs, iters: int = 3) -> dict:
+    prev = kmetrics.set_registry(MetricsRegistry())
+    try:
+        rng = np.random.default_rng(0)
+        cells = []
+        for name in configs:
+            cfg = get_config(name, smoke=False)
+            cells.append(_matmul_cell(name, cfg, rng, iters))
+            cells.append(_mlp_cell(name, cfg, rng, iters))
+            if cfg.attention_type != "mla":   # kv_quant='bp8' is GQA-only
+                cells.append(_attention_cell(name, cfg, rng, iters))
+        doc = {
+            "benchmark": "kernels",
+            "schema_version": 1,
+            "units": {
+                "bytes": "HBM bytes/call, analytic model at full shape",
+                "cpu_us": "mean wall-clock us, interpret mode, proxy shape",
+            },
+            "notes": ("matmul/mlp bytes assume weight-stationary int8 codes"
+                      " (prepare_bp_weight); cpu columns run the drop-in"
+                      " real-weight path"),
+            "cells": cells,
+            "metrics": kmetrics.get_registry().snapshot(),
+        }
+    finally:
+        kmetrics.set_registry(prev)
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2-config sweep, 1 timing iter (CI smoke)")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    doc = run_sweep(QUICK_SWEEP if args.quick else SWEEP,
+                    iters=1 if args.quick else 3)
+    with open(args.out, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    for c in doc["cells"]:
+        print(f"{c['kernel']:24s} {c['config']:18s} "
+              f"bytes {c['bytes_unfused'] / c['bytes_fused']:5.2f}x  "
+              f"cpu {c['cpu_unfused_us'] / max(c['cpu_fused_us'], 1e-9):5.2f}x"
+              f"{'  (cpu waiver)' if c['waiver'] else ''}")
+    print(f"wrote {args.out}: {len(doc['cells'])} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -164,6 +164,62 @@ def check_serve(doc, min_configs: int = SERVE_MIN_CONFIGS) -> list:
     return errors
 
 
+KERNELS_TOP_FIELDS = ("schema_version", "units", "cells", "metrics")
+KERNELS_CELL_FIELDS = ("bytes_fused", "bytes_unfused", "cpu_fused_us",
+                       "cpu_unfused_us")
+KERNELS_MIN_CELLS = 6
+
+
+def check_kernels(doc, min_cells: int = KERNELS_MIN_CELLS) -> list:
+    """BENCH_kernels.json: fused <= unfused bytes on EVERY cell (the
+    no-HBM-round-trip claim has no waiver); CPU interpret timings may
+    regress only under an explicit documented waiver string."""
+    errors = []
+    for f in KERNELS_TOP_FIELDS:
+        if f not in doc:
+            errors.append(f"kernels doc: missing top-level field {f!r}")
+    cells = doc.get("cells", [])
+    if len(cells) < min_cells:
+        errors.append(f"kernels doc: only {len(cells)} cells, "
+                      f"need >= {min_cells}")
+    for j, c in enumerate(cells):
+        tag = f"kernels cell[{j}] {c.get('kernel')}/{c.get('config')}"
+        for f in KERNELS_CELL_FIELDS:
+            v = c.get(f)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                errors.append(f"{tag}: missing/non-numeric {f!r}")
+        if not isinstance(c.get("shape"), dict) or not c.get("shape"):
+            errors.append(f"{tag}: missing 'shape'")
+        bf, bu = c.get("bytes_fused", 0), c.get("bytes_unfused", 0)
+        if isinstance(bf, (int, float)) and isinstance(bu, (int, float)):
+            if bf <= 0:
+                errors.append(f"{tag}: bytes_fused not positive")
+            elif bf > bu:
+                errors.append(f"{tag}: bytes_fused > bytes_unfused "
+                              f"({bf} > {bu}) — no waiver applies to bytes")
+        terms = c.get("terms_fused")
+        if not isinstance(terms, dict) or not terms:
+            errors.append(f"{tag}: missing 'terms_fused' accounting")
+        else:
+            bad = [t for t in terms
+                   if "codes_write" in t or "rescale" in t
+                   or "bitplane" in t or "quantize" in t]
+            if bad:
+                errors.append(f"{tag}: fused accounting has round-trip "
+                              f"terms {bad}")
+        tf, tu = c.get("cpu_fused_us", 0), c.get("cpu_unfused_us", 0)
+        if isinstance(tf, (int, float)) and isinstance(tu, (int, float)):
+            if tf > tu and not (isinstance(c.get("waiver"), str)
+                                and c["waiver"].strip()):
+                errors.append(f"{tag}: cpu_fused_us > cpu_unfused_us "
+                              f"({tf} > {tu}) without a documented waiver")
+    metrics = doc.get("metrics", [])
+    names = {m.get("name") for m in metrics if isinstance(m, dict)}
+    if "kernels.calls" not in names:
+        errors.append("kernels doc: metrics snapshot lacks 'kernels.calls'")
+    return errors
+
+
 LIFECYCLE_FIELDS = ("rid", "priority", "prompt_tokens", "max_new_tokens",
                     "output_tokens", "arrival_step", "admitted_step",
                     "first_token_step", "finish_step", "queue_wait_steps",
@@ -260,6 +316,12 @@ def main() -> int:
             n = sum(len(c.get("sweep", []))
                     for c in records.get("configs", []))
             kind = "serve"
+        elif (isinstance(records, dict)
+              and records.get("benchmark") == "kernels"):
+            errors = check_kernels(records, min_configs
+                                   if len(sys.argv) > 2 else KERNELS_MIN_CELLS)
+            n = len(records.get("cells", []))
+            kind = "kernels"
         else:
             errors = check(records)
             n = len(records)
@@ -272,6 +334,9 @@ def main() -> int:
     if kind == "serve":
         print(f"OK: {path} ({len(records['configs'])} configs, "
               f"{n} sweep records)")
+    elif kind == "kernels":
+        waived = sum(1 for c in records["cells"] if c.get("waiver"))
+        print(f"OK: {path} ({n} kernel cells, {waived} cpu-waived)")
     elif kind == "lifecycle":
         print(f"OK: {path} ({n} lifecycle records)")
     elif kind == "trace":

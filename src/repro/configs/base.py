@@ -66,7 +66,12 @@ class ModelConfig:
     tie_embeddings: bool = True
     norm_eps: float = 1e-6
     param_dtype: str = "bfloat16"
-    matmul_mode: str = "bf16"    # bf16 | bp8 | bp8_lowrank | fp8
+    matmul_mode: str = "bf16"    # bf16 | bp8 | bp8_lowrank | bp8_fused | fp8
+    # KV-cache storage format: "none" keeps bf16 k/v; "bp8" stores int8
+    # Bent-Pyramid level codes + per-token/per-head f32 scales and decodes
+    # through the fused Pallas attention kernel (GQA/MQA only, not MLA —
+    # the latent cache is already compressed).
+    kv_quant: str = "none"
     remat: bool = True
     scan_layers: bool = True
     attn_chunk: int = 1024       # KV chunk for memory-efficient attention

@@ -1,0 +1,190 @@
+"""Fused decode attention over a BP-quantised KV cache (Pallas).
+
+The KV cache stores int8 sign*level codes plus a per-token, per-kv-head
+f32 scale (the finest "per-block" granularity — one block per appended
+token, so decode writes never re-encode neighbours; under the paged
+engine the leaves page exactly like k/v because the scale carries the
+same ``kv_seq`` axis).  The kernel gathers nothing dequantised: codes
+stream from HBM at 1 byte/element (vs 2 for bf16, 4 for f32), are
+dequantised in VMEM chunk by chunk, and feed a flash-attention-style
+online softmax carried in scratch across the KV-chunk grid axis.
+
+``bp8_decode_attention_ref`` is the unfused oracle: dequantise the whole
+cache, mask, softmax, weighted sum — the same math in one shot.  The
+kernel matches it to ~1e-5 (softmax reassociation across chunks; see
+docs/kernels.md for the documented tolerance).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bp
+
+NEG_INF = -1e30
+BIG_WINDOW = 1 << 30
+
+
+def _default_interpret(interpret):
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+# ---------------------------------------------------------------------------
+# KV quantise / dequantise (per-token, per-kv-head scales)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(B, S, KH, D) real -> (int8 sign*level codes, (B, S, KH) f32 scale).
+
+    Scale is max-|x| over the head dimension (one block per token/head),
+    mirroring ``quantize_bp`` with ``axis=-1``.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    lvl = jnp.clip(jnp.round(jnp.abs(xf) / scale[..., None] * 10.0), 0.0,
+                   float(bp.NUM_LEVELS - 1))
+    codes = (jnp.sign(xf) * lvl).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_kv(codes: jax.Array, scale: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Invert ``quantize_kv``: value = codes / 10 * scale."""
+    return codes.astype(dtype) / 10.0 * scale[..., None].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused decode kernel
+# ---------------------------------------------------------------------------
+
+def _decode_attn_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, kvp_ref,
+                        qp_ref, win_ref, out_ref, m_s, l_s, acc_s, *,
+                        n_chunks: int, softcap, causal: bool):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+    kc = kc_ref[0, :, 0].astype(jnp.float32)               # (c, D)
+    ks = ks_ref[0, :, 0].astype(jnp.float32)               # (c,)
+    k = kc / 10.0 * ks[:, None]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, c)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kp = kvp_ref[0, :]                                     # (c,) int32
+    qp = qp_ref[0, 0]
+    ok = kp >= 0
+    if causal:
+        ok = ok & (kp <= qp)
+    ok = ok & (qp - kp < win_ref[0, 0])
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_s[...]                                      # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    vc = vc_ref[0, :, 0].astype(jnp.float32)               # (c, Dv)
+    vs = vs_ref[0, :, 0].astype(jnp.float32)
+    v = vc / 10.0 * vs[:, None]
+    m_s[...] = m_new
+    l_s[...] = l_s[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _finish():
+        out_ref[0, 0] = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    if s % chunk == 0:
+        return chunk
+    # largest power of two <= chunk that divides S, else one chunk
+    c = chunk
+    while c > 1:
+        if s % c == 0:
+            return c
+        c //= 2
+    return s
+
+
+def bp8_decode_attention(q: jax.Array, k_codes: jax.Array,
+                         k_scale: jax.Array, v_codes: jax.Array,
+                         v_scale: jax.Array, kv_pos: jax.Array,
+                         q_pos: jax.Array, window: jax.Array | int | None,
+                         *, softcap=None, causal: bool = True,
+                         chunk: int = 128,
+                         interpret: bool | None = None) -> jax.Array:
+    """One decoded token per row, attending a BP-quantised cache.
+
+    ``q``: (B, KH, G, D) f32, already scaled by 1/sqrt(D).
+    ``k_codes``/``v_codes``: (B, S, KH, D) int8; ``k_scale``/``v_scale``:
+    (B, S, KH) f32; ``kv_pos``: (B, S) int32 (-1 = empty slot);
+    ``q_pos``: (B,) int32; ``window``: traced int32 (or None = no window).
+    Returns (B, KH, G, D) f32.
+    """
+    interpret = _default_interpret(interpret)
+    b, kh, g, d = q.shape
+    s = k_codes.shape[1]
+    dv = v_codes.shape[-1]
+    c = _pick_chunk(s, chunk)
+    n_chunks = s // c
+    if window is None:
+        window = BIG_WINDOW
+    win = jnp.reshape(jnp.asarray(window, jnp.int32), (1, 1))
+    qp = q_pos.astype(jnp.int32).reshape(b, 1)
+    kernel = functools.partial(_decode_attn_kernel, n_chunks=n_chunks,
+                               softcap=softcap, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, c, 1, d), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, c, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, c, 1, dv), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, c, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, c), lambda bi, hi, ci: (bi, ci)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (bi, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dv), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k_codes, k_scale, v_codes, v_scale,
+      kv_pos.astype(jnp.int32), qp, win)
+
+
+def bp8_decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale, kv_pos,
+                             q_pos, window, *, softcap=None,
+                             causal: bool = True) -> jax.Array:
+    """Unfused oracle: dequantise the whole cache, then plain SDPA."""
+    k = dequantize_kv(k_codes, k_scale)                    # (B, S, KH, D)
+    v = dequantize_kv(v_codes, v_scale)
+    qf = q.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, k)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if window is None:
+        window = BIG_WINDOW
+    qp = q_pos.astype(jnp.int32)[:, None]                  # (B, 1)
+    ok = kv_pos >= 0
+    if causal:
+        ok = ok & (kv_pos <= qp)
+    ok = ok & (qp - kv_pos < jnp.asarray(window, jnp.int32))
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgs,bshv->bhgv", p, v)

@@ -1,0 +1,272 @@
+"""Fused Pallas kernels: BP quantisation folded into the compute programs.
+
+OISMA's premise is that the Bent-Pyramid encode is *on-the-fly*: the
+bitstream is generated in a single cycle next to the stored operand and
+never materialised in memory.  The unfused TPU mapping in ``ops.py``
+honored that only inside the lone matmul kernel — the surrounding
+pipeline still quantised, padded and rescaled through HBM on every call.
+The kernels here fold the whole periphery into the Pallas program:
+
+  * ``absmax_pallas`` — the scale scan (the paper's peak-detect pass): a
+    grid-wide max-|x| reduction into a (1, 1) output.  This is the only
+    extra pass over the operand the fused path makes.
+  * ``fused_bp_matmul_pallas`` — prologue: encode the f32 activation tile
+    into sign-carrying bitplanes in VMEM (and, for f32 weights, the
+    weight tile too; pre-encoded int8 weight codes are expanded exactly
+    as the unfused kernel does); body: one MXU matmul over the
+    8x-expanded tiles, integer accumulation in the resident output tile;
+    epilogue: the 1/10 BP8 output scaling and both tensor scales applied
+    in place on the last K step.  Level codes and bitplanes exist only in
+    VMEM — nothing quantised ever round-trips HBM.
+  * ``fused_mlp_pallas`` — the silu-gate MLP in one grid: the up and gate
+    matmuls share the encoded activation tile and accumulate into two
+    VMEM scratch tiles; the epilogue applies both rescales, the
+    activation, and the elementwise product before the single output
+    write.  The unfused path writes/reads the two (M, F) projections
+    through HBM and runs the activation as a separate pass.
+
+Encode semantics match ``repro.core.quantize.quantize_bp`` expression-
+for-expression (``clip(round(|x| / s * 10), 0, 9)`` with a per-tensor
+max-|x| scale), so the fused matmul is bit-identical to the unfused
+quantise -> codes -> matmul -> rescale pipeline (see ``ref.py``).
+
+Default tiling note: ``block_n`` defaults large (2048) so the f32
+activation panel is re-read as few times as possible — the weight
+operand is the cheap one to stream (int8 codes, or f32 re-read only
+``ceil(M/block_m)`` times since M is the token dimension).  This mirrors
+OISMA's weight-stationary array: weights sit still, activations arrive
+and are encoded on the fly.  ``kernels/traffic.py`` carries the HBM
+bytes model for both schedules.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bp
+from repro.kernels.bp_matmul import BITS, _expand_planes, _plane_thresholds
+
+
+def _default_interpret(interpret):
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+# ---------------------------------------------------------------------------
+# absmax scan (the scale pass)
+# ---------------------------------------------------------------------------
+
+def _absmax_kernel(x_ref, out_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile_max = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)))
+    out_ref[0, 0] = jnp.maximum(out_ref[0, 0], tile_max)
+
+
+def absmax_pallas(x: jax.Array, *, block_m: int = 256, block_n: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    """Per-tensor max-|x| of a 2-D array as a (1, 1) f32 (no scale floor)."""
+    interpret = _default_interpret(interpret)
+    m, n = x.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (x.shape, bm, bn)
+    return pl.pallas_call(
+        _absmax_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel BP encode
+# ---------------------------------------------------------------------------
+
+def _encode_planes(x, scale, which: str, compute_dtype):
+    """f32 tile + scalar scale -> (.., 8) signed bitplanes, all in VMEM.
+
+    Level codes are never materialised as int8: the nested-pyramid
+    thresholds turn the encode into 8 scalar comparisons on the level
+    value.  The level expression mirrors ``quantize_bp`` exactly.
+    """
+    lvl = jnp.clip(jnp.round(jnp.abs(x.astype(jnp.float32)) / scale * 10.0),
+                   0.0, float(bp.NUM_LEVELS - 1))
+    sgn = jnp.sign(x).astype(compute_dtype)
+    thresh = _plane_thresholds(which)
+    planes = [(lvl >= t).astype(compute_dtype) for t in thresh]
+    return jnp.stack(planes, axis=-1) * sgn[..., None]
+
+
+# ---------------------------------------------------------------------------
+# fused quantise -> bitplane matmul -> rescale
+# ---------------------------------------------------------------------------
+
+def _fused_matmul_kernel(x_ref, y_ref, sx_ref, sy_ref, out_ref, *,
+                         n_k: int, y_coded: bool, compute_dtype):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    sx = sx_ref[0, 0]
+    sy = sy_ref[0, 0]
+    xp = _encode_planes(x_ref[...], sx, "right", compute_dtype)
+    if y_coded:
+        yp = _expand_planes(y_ref[...], "left", compute_dtype)
+    else:
+        yp = _encode_planes(y_ref[...], sy, "left", compute_dtype)
+    bm, bk, _ = xp.shape
+    bn = yp.shape[1]
+    xw = xp.reshape(bm, bk * BITS)
+    yw = yp.transpose(0, 2, 1).reshape(bk * BITS, bn)
+    out_ref[...] += jnp.dot(xw, yw, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _rescale():
+        out_ref[...] *= (sx * sy) * 0.1
+
+
+def fused_bp_matmul_pallas(x: jax.Array, y: jax.Array, x_scale: jax.Array,
+                           y_scale: jax.Array, *, block_m: int = 128,
+                           block_n: int = 2048, block_k: int = 128,
+                           compute_dtype=jnp.float32,
+                           interpret: bool | None = None) -> jax.Array:
+    """Single-program OISMA matmul: encode, multiply, rescale in VMEM.
+
+    ``x``: (M, K) real activations, encoded right-biased in the prologue.
+    ``y``: (K, N) — either real weights (encoded left-biased in the
+    prologue) or pre-encoded int8 sign*level codes (expanded in VMEM like
+    the unfused kernel; the weight-stationary production path).
+    ``x_scale``/``y_scale``: (1, 1) per-tensor scales (for coded ``y``
+    the scale its codes were encoded under).  Returns f32
+    ``(x @ y)``-equivalent under BP semantics — scales and the 1/10 BP8
+    output factor are applied in the epilogue.
+    """
+    interpret = _default_interpret(interpret)
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, k, n), (block_m, block_k, block_n))
+    y_coded = jnp.issubdtype(y.dtype, jnp.integer)
+    n_k = k // block_k
+    kernel = functools.partial(_fused_matmul_kernel, n_k=n_k,
+                               y_coded=y_coded, compute_dtype=compute_dtype)
+    sx = jnp.reshape(x_scale.astype(jnp.float32), (1, 1))
+    sy = jnp.reshape(y_scale.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y, sx, sy)
+
+
+# ---------------------------------------------------------------------------
+# fused silu-gate MLP
+# ---------------------------------------------------------------------------
+
+def _kernel_activation(x, kind: str):
+    if kind == "silu":
+        return x * jax.nn.sigmoid(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    raise ValueError(kind)
+
+
+def _fused_mlp_kernel(x_ref, up_ref, gate_ref, sx_ref, su_ref, sg_ref,
+                      out_ref, acc_up, acc_gate, *, n_k: int, act: str,
+                      w_coded: bool, compute_dtype):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_up[...] = jnp.zeros_like(acc_up)
+        acc_gate[...] = jnp.zeros_like(acc_gate)
+
+    sx = sx_ref[0, 0]
+    su = su_ref[0, 0]
+    sg = sg_ref[0, 0]
+    xp = _encode_planes(x_ref[...], sx, "right", compute_dtype)
+    bm, bk, _ = xp.shape
+    xw = xp.reshape(bm, bk * BITS)
+    for w_ref, scale, acc in ((up_ref, su, acc_up), (gate_ref, sg, acc_gate)):
+        if w_coded:
+            wp = _expand_planes(w_ref[...], "left", compute_dtype)
+        else:
+            wp = _encode_planes(w_ref[...], scale, "left", compute_dtype)
+        ww = wp.transpose(0, 2, 1).reshape(bk * BITS, wp.shape[1])
+        acc[...] += jnp.dot(xw, ww, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _epilogue():
+        u = acc_up[...] * ((sx * su) * 0.1)
+        g = acc_gate[...] * ((sx * sg) * 0.1)
+        out_ref[...] = _kernel_activation(g, act) * u
+
+
+def fused_mlp_pallas(x: jax.Array, w_up: jax.Array, w_gate: jax.Array,
+                     x_scale: jax.Array, up_scale: jax.Array,
+                     gate_scale: jax.Array, *, act: str = "silu",
+                     block_m: int = 128, block_f: int = 512,
+                     block_k: int = 128, compute_dtype=jnp.float32,
+                     interpret: bool | None = None) -> jax.Array:
+    """act(x @ w_gate) * (x @ w_up) in one grid, BP-quantised operands.
+
+    ``x``: (M, K) f32; ``w_up``/``w_gate``: (K, F), real or pre-encoded
+    int8 codes (both must agree).  Both matmuls accumulate into VMEM
+    scratch; the activation and elementwise product run in the epilogue,
+    so the two (M, F) projections never reach HBM.  Returns (M, F) f32.
+    """
+    interpret = _default_interpret(interpret)
+    m, k = x.shape
+    k2, f = w_up.shape
+    assert k == k2 and w_gate.shape == w_up.shape, (x.shape, w_up.shape,
+                                                    w_gate.shape)
+    assert m % block_m == 0 and f % block_f == 0 and k % block_k == 0, (
+        (m, k, f), (block_m, block_k, block_f))
+    w_coded = jnp.issubdtype(w_up.dtype, jnp.integer)
+    assert w_coded == jnp.issubdtype(w_gate.dtype, jnp.integer)
+    n_k = k // block_k
+    kernel = functools.partial(_fused_mlp_kernel, n_k=n_k, act=act,
+                               w_coded=w_coded, compute_dtype=compute_dtype)
+    sx = jnp.reshape(x_scale.astype(jnp.float32), (1, 1))
+    su = jnp.reshape(up_scale.astype(jnp.float32), (1, 1))
+    sg = jnp.reshape(gate_scale.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, f // block_f, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_f), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, f), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_f), jnp.float32),
+                        pltpu.VMEM((block_m, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w_up, w_gate, sx, su, sg)

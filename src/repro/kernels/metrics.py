@@ -1,0 +1,39 @@
+"""Kernel-library instrumentation through the PR 7 observability layer.
+
+The fused wrappers record into a module-level ``MetricsRegistry`` (the
+``kernels.*`` family): call counts per kernel, padded-element waste from
+tile alignment, and the analytic bytes-saved-vs-unfused gauge from
+``kernels.traffic``.  The bench harness snapshots this registry into
+``BENCH_kernels.json`` so the committed artifact carries the counters.
+
+Recording is skipped under tracing (shapes inside ``jit`` are already
+static, but the *call* would be recorded once per trace, not per
+execution — recording only on eager entry keeps the counters honest and
+the kernels jit-safe).
+"""
+from __future__ import annotations
+
+from repro.obs.registry import MetricsRegistry
+
+_registry = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    return _registry
+
+
+def set_registry(registry: MetricsRegistry) -> MetricsRegistry:
+    """Swap the sink (e.g. the bench harness installing a fresh one)."""
+    global _registry
+    prev, _registry = _registry, registry
+    return prev
+
+
+def record_call(kernel: str, *, padded_elements: int = 0,
+                bytes_saved: int | None = None) -> None:
+    _registry.counter("kernels.calls", kernel=kernel)
+    if padded_elements:
+        _registry.counter("kernels.padded_elements", padded_elements,
+                          kernel=kernel)
+    if bytes_saved is not None:
+        _registry.gauge("kernels.bytes_saved", bytes_saved, kernel=kernel)

@@ -1,18 +1,40 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``oisma_matmul`` is the end-to-end entry point the model zoo dispatches to
-when a layer runs in ``matmul_mode='bp8'``: quantise -> level codes ->
-Pallas bitplane matmul -> rescale.
+``oisma_matmul`` is the end-to-end entry point the model zoo dispatches
+to when a layer runs in ``matmul_mode='bp8_fused'``.  The default
+``impl='fused'`` runs the single-program schedule from ``fused.py``:
+absmax scan, then one Pallas program that encodes tiles in VMEM,
+multiplies, and rescales in the epilogue — no level codes or bitplanes
+ever round-trip HBM.  ``impl='unfused'`` keeps the historical pipeline
+(eager ``quantize_bp`` -> int8 codes -> Pallas bitplane matmul -> eager
+rescale) as the reference; the two are bit-identical because every
+floating-point expression (scale, level, rescale association) matches.
+
+Shape contract: callers pass any (M, K) x (K, N); the wrappers pad up to
+the clamped block grid and ``_unpad`` slices the result back, so padding
+is invisible (zero rows/columns encode to level 0 and contribute nothing
+to the integer accumulation).
+
+``prepare_bp_weight`` encodes a weight once into int8 codes + scale for
+the weight-stationary fused path — OISMA's weights-programmed-into-the-
+array story, and the schedule under which the fused path's HBM traffic
+wins by the largest margin (see ``kernels/traffic.py``).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import quantize_bp
 from repro.kernels import bp_matmul as _k
+from repro.kernels import fused as _f
+from repro.kernels import metrics as _metrics
+from repro.kernels import traffic as _traffic
+
+_TINY = float(jnp.finfo(jnp.float32).tiny)
 
 
 def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
@@ -23,10 +45,41 @@ def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
     return x
 
 
+def _unpad(x: jax.Array, m: int, n: int) -> jax.Array:
+    """Slice a padded kernel result back to the caller's (m, n)."""
+    return x if x.shape == (m, n) else x[:m, :n]
+
+
+def _next_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _clamp_blocks(m: int, k: int, n: int, block_m: int, block_n: int,
+                  block_k: int) -> Tuple[int, int, int]:
+    return (min(block_m, _next_mult(m, 8)),
+            min(block_n, _next_mult(n, 128)),
+            min(block_k, _next_mult(k, 128)))
+
+
 def to_codes(q) -> jax.Array:
     """BPQuantized -> int8 sign*level codes."""
     return (q.sign.astype(jnp.int8) * q.levels.astype(jnp.int8))
 
+
+def prepare_bp_weight(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Encode a (K, N) weight once: (int8 sign*level codes, (1, 1) scale).
+
+    The codes live in HBM at 1 byte/element and feed ``oisma_matmul``'s
+    ``y`` directly (the fused kernel expands them in VMEM); the encode
+    cost amortises over every forward call.
+    """
+    q = quantize_bp(w.astype(jnp.float32))
+    return to_codes(q), q.scale.reshape(1, 1)
+
+
+# ---------------------------------------------------------------------------
+# unfused reference pipeline (codes through HBM)
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
@@ -36,30 +89,206 @@ def bp_matmul_codes(x_codes: jax.Array, y_codes: jax.Array,
     """Padded/unpadded wrapper over the Pallas kernel (integer result)."""
     m, k = x_codes.shape
     n = y_codes.shape[1]
-    bm = min(block_m, _next_mult(m, 8))
-    bn = min(block_n, _next_mult(n, 128))
-    bk = min(block_k, _next_mult(k, 128))
+    bm, bn, bk = _clamp_blocks(m, k, n, block_m, block_n, block_k)
     xp = _pad_to(x_codes, bm, bk)
     yp = _pad_to(y_codes, bk, bn)
     out = _k.bp_matmul_pallas(xp, yp, block_m=bm, block_n=bn, block_k=bk,
                               interpret=interpret)
-    return out[:m, :n]
+    return _unpad(out, m, n)
 
 
-def _next_mult(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
+def oisma_matmul_unfused(x: jax.Array, y: jax.Array, *,
+                         interpret: bool | None = None, block_m: int = 128,
+                         block_n: int = 128, block_k: int = 128) -> jax.Array:
+    """The historical pipeline: eager quantise -> codes matmul -> rescale.
 
-
-def oisma_matmul(x: jax.Array, y: jax.Array, *, interpret: bool | None = None,
-                 block_m: int = 128, block_n: int = 128,
-                 block_k: int = 128) -> jax.Array:
-    """OISMA-simulated x @ y for real 2-D operands (signed, scaled)."""
-    qx = quantize_bp(x)
-    qy = quantize_bp(y)
+    Kept as the reference implementation; the rescale association
+    ``acc * ((sx * sy) * 0.1)`` matches the fused epilogue exactly so the
+    two paths are bit-identical (pinned by tests/test_kernels_fused.py).
+    """
+    qx = quantize_bp(x.astype(jnp.float32))
+    qy = quantize_bp(y.astype(jnp.float32))
     acc = bp_matmul_codes(to_codes(qx), to_codes(qy), block_m=block_m,
                           block_n=block_n, block_k=block_k,
                           interpret=interpret)
-    return (acc / 10.0) * (qx.scale * qy.scale).astype(acc.dtype)
+    return acc * ((qx.scale * qy.scale) * 0.1).astype(acc.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused pipeline (codes only in VMEM)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def _fused_matmul_real(x, y, block_m, block_n, block_k, interpret):
+    m, k = x.shape
+    n = y.shape[1]
+    bm, bn, bk = _clamp_blocks(m, k, n, block_m, block_n, block_k)
+    xp = _pad_to(x.astype(jnp.float32), bm, bk)
+    yp = _pad_to(y.astype(jnp.float32), bk, bn)
+    sx = jnp.maximum(_f.absmax_pallas(xp, block_m=bm, block_n=bk,
+                                      interpret=interpret), _TINY)
+    sy = jnp.maximum(_f.absmax_pallas(yp, block_m=bk, block_n=bn,
+                                      interpret=interpret), _TINY)
+    out = _f.fused_bp_matmul_pallas(xp, yp, sx, sy, block_m=bm, block_n=bn,
+                                    block_k=bk, interpret=interpret)
+    return _unpad(out, m, n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def _fused_matmul_coded(x, y_codes, y_scale, block_m, block_n, block_k,
+                        interpret):
+    m, k = x.shape
+    n = y_codes.shape[1]
+    bm, bn, bk = _clamp_blocks(m, k, n, block_m, block_n, block_k)
+    xp = _pad_to(x.astype(jnp.float32), bm, bk)
+    yp = _pad_to(y_codes, bk, bn)
+    sx = jnp.maximum(_f.absmax_pallas(xp, block_m=bm, block_n=bk,
+                                      interpret=interpret), _TINY)
+    out = _f.fused_bp_matmul_pallas(xp, yp, sx, y_scale, block_m=bm,
+                                    block_n=bn, block_k=bk,
+                                    interpret=interpret)
+    return _unpad(out, m, n)
+
+
+def _record(kernel: str, fused, unfused, *leaves) -> None:
+    if any(isinstance(v, jax.core.Tracer) for v in leaves):
+        return  # inside jit/grad tracing: shapes recorded at eager entry only
+    _metrics.record_call(kernel, padded_elements=fused["padded_elements"],
+                         bytes_saved=unfused["total"] - fused["total"])
+
+
+def oisma_matmul(x: jax.Array, y: jax.Array, *,
+                 y_scale: Optional[jax.Array] = None, impl: str = "fused",
+                 interpret: bool | None = None, block_m: int = 128,
+                 block_n: Optional[int] = None,
+                 block_k: int = 128) -> jax.Array:
+    """OISMA-simulated x @ y for real 2-D operands (signed, scaled).
+
+    ``y`` may be real (K, N) weights or pre-encoded int8 codes from
+    ``prepare_bp_weight`` (then ``y_scale`` is required).  ``impl``:
+    'fused' (single Pallas program, default) or 'unfused' (the reference
+    pipeline).  ``block_n`` defaults to 2048 fused / 128 unfused — the
+    fused schedule wants wide output tiles so the f32 activation panel is
+    re-read as few times as possible.
+    """
+    if x.shape[-1] != y.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    y_coded = jnp.issubdtype(y.dtype, jnp.integer)
+    if impl == "unfused":
+        if y_coded:
+            raise ValueError("impl='unfused' takes real weights")
+        bn = 128 if block_n is None else block_n
+        return oisma_matmul_unfused(x, y, interpret=interpret,
+                                    block_m=block_m, block_n=bn,
+                                    block_k=block_k)
+    if impl != "fused":
+        raise ValueError(f"unknown impl {impl!r}")
+    bn = 2048 if block_n is None else block_n
+    m, k = x.shape
+    n = y.shape[1]
+    _record("fused_matmul",
+            _traffic.matmul_traffic_fused(m, k, n, weights_coded=bool(y_coded)),
+            _traffic.matmul_traffic_unfused(m, k, n), x, y)
+    if y_coded:
+        if y_scale is None:
+            raise ValueError("coded y needs y_scale (see prepare_bp_weight)")
+        return _fused_matmul_coded(x, y, y_scale, block_m, bn, block_k,
+                                   interpret)
+    return _fused_matmul_real(x, y, block_m, bn, block_k, interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused silu-gate MLP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("act", "block_m", "block_f",
+                                             "block_k", "interpret"))
+def _fused_mlp_real(x, w_up, w_gate, act, block_m, block_f, block_k,
+                    interpret):
+    m, k = x.shape
+    f = w_up.shape[1]
+    bm, bf, bk = _clamp_blocks(m, k, f, block_m, block_f, block_k)
+    xp = _pad_to(x.astype(jnp.float32), bm, bk)
+    up = _pad_to(w_up.astype(jnp.float32), bk, bf)
+    gate = _pad_to(w_gate.astype(jnp.float32), bk, bf)
+    sx = jnp.maximum(_f.absmax_pallas(xp, block_m=bm, block_n=bk,
+                                      interpret=interpret), _TINY)
+    su = jnp.maximum(_f.absmax_pallas(up, block_m=bk, block_n=bf,
+                                      interpret=interpret), _TINY)
+    sg = jnp.maximum(_f.absmax_pallas(gate, block_m=bk, block_n=bf,
+                                      interpret=interpret), _TINY)
+    out = _f.fused_mlp_pallas(xp, up, gate, sx, su, sg, act=act, block_m=bm,
+                              block_f=bf, block_k=bk, interpret=interpret)
+    return _unpad(out, m, f)
+
+
+def oisma_mlp(x: jax.Array, w_up: jax.Array, w_gate: jax.Array, *,
+              act: str = "silu", interpret: bool | None = None,
+              block_m: int = 128, block_f: int = 512,
+              block_k: int = 128) -> jax.Array:
+    """act(x @ w_gate) * (x @ w_up), both projections BP-fused in one grid."""
+    m, k = x.shape
+    f = w_up.shape[1]
+    if k != w_up.shape[0] or w_gate.shape != w_up.shape:
+        raise ValueError(f"mlp shapes: {x.shape}, {w_up.shape}, {w_gate.shape}")
+    _record("fused_mlp",
+            _traffic.mlp_traffic_fused(m, k, f, weights_coded=False),
+            _traffic.mlp_traffic_unfused(m, k, f), x, w_up, w_gate)
+    return _fused_mlp_real(x, w_up, w_gate, act, block_m, block_f, block_k,
+                           interpret)
+
+
+# ---------------------------------------------------------------------------
+# straight-through wrappers (trainable dispatch targets)
+# ---------------------------------------------------------------------------
+
+def oisma_matmul_ste(x: jax.Array, y: jax.Array, *,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused forward, plain f32 matmul gradients (straight-through)."""
+
+    @jax.custom_vjp
+    def _ste(x, y):
+        return oisma_matmul(x, y, interpret=interpret)
+
+    def _fwd(x, y):
+        return _ste(x, y), (x, y)
+
+    def _bwd(res, g):
+        x, y = res
+        gf = g.astype(jnp.float32)
+        return (gf @ y.astype(jnp.float32).T, x.astype(jnp.float32).T @ gf)
+
+    _ste.defvjp(_fwd, _bwd)
+    return _ste(x, y)
+
+
+def oisma_mlp_ste(x: jax.Array, w_up: jax.Array, w_gate: jax.Array, *,
+                  act: str = "silu",
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused MLP forward; gradients of the plain f32 gated MLP (STE)."""
+    from repro.models.layers import activation as _activation
+
+    def _plain(x, w_up, w_gate):
+        xf = x.astype(jnp.float32)
+        u = xf @ w_up.astype(jnp.float32)
+        g = xf @ w_gate.astype(jnp.float32)
+        return _activation(g, act) * u
+
+    @jax.custom_vjp
+    def _ste(x, w_up, w_gate):
+        return oisma_mlp(x, w_up, w_gate, act=act, interpret=interpret)
+
+    def _fwd(x, w_up, w_gate):
+        return _ste(x, w_up, w_gate), (x, w_up, w_gate)
+
+    def _bwd(res, g):
+        _, vjp = jax.vjp(_plain, *res)
+        return vjp(g.astype(jnp.float32))
+
+    _ste.defvjp(_fwd, _bwd)
+    return _ste(x, w_up, w_gate)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -57,3 +57,50 @@ def bp_quantize_ref(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     """Oracle for the quantisation kernel (matches repro.core.quantize)."""
     lvl = jnp.clip(jnp.round(jnp.abs(x) / scale * 10.0), 0, 9)
     return (jnp.sign(x) * lvl).astype(jnp.int8)
+
+
+def _tensor_scale(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor max-|x| scale, floored like ``quantize_bp``."""
+    s = jnp.max(jnp.abs(x))
+    return jnp.maximum(s, jnp.finfo(jnp.float32).tiny)
+
+
+def fused_matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Unfused oracle for the fused matmul: eager quantise both operands,
+    integer bitstream matmul, then the epilogue's exact rescale expression
+    ``acc * ((sx * sy) * 0.1)`` — the fused kernel must match this
+    bit-for-bit (same scale, level, and rescale associations)."""
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    sx = _tensor_scale(xf)
+    sy = _tensor_scale(yf)
+    acc = bp_matmul_ref(bp_quantize_ref(xf, sx), bp_quantize_ref(yf, sy))
+    return acc * ((sx * sy) * 0.1)
+
+
+def fused_mlp_ref(x: jnp.ndarray, w_up: jnp.ndarray, w_gate: jnp.ndarray,
+                  act: str = "silu") -> jnp.ndarray:
+    """Unfused oracle for the fused MLP: two fused-matmul oracles sharing
+    the activation's quantisation, then act(gate) * up as a separate pass
+    (what the unfused path writes through HBM)."""
+    import jax
+
+    xf = x.astype(jnp.float32)
+    sx = _tensor_scale(xf)
+    xc = bp_quantize_ref(xf, sx)
+    outs = []
+    for w in (w_up, w_gate):
+        wf = w.astype(jnp.float32)
+        sw = _tensor_scale(wf)
+        acc = bp_matmul_ref(xc, bp_quantize_ref(wf, sw))
+        outs.append(acc * ((sx * sw) * 0.1))
+    u, g = outs
+    if act == "silu":
+        a = g * jax.nn.sigmoid(g)
+    elif act == "gelu":
+        a = jax.nn.gelu(g, approximate=True)
+    elif act == "relu":
+        a = jnp.maximum(g, 0.0)
+    else:
+        raise ValueError(act)
+    return a * u

@@ -123,21 +123,66 @@ def sdpa(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
 # KV cache
 # ---------------------------------------------------------------------------
 
+def _kv_quantized(cfg: ModelConfig) -> bool:
+    if cfg.kv_quant == "none":
+        return False
+    if cfg.kv_quant != "bp8":
+        raise ValueError(f"unknown kv_quant {cfg.kv_quant!r}")
+    if cfg.attention_type == "mla":
+        raise ValueError("kv_quant='bp8' is GQA/MQA-only; the MLA latent "
+                         "cache is already compressed")
+    return True
+
+
 def kv_cache_spec(cfg: ModelConfig, batch: int, length: int,
                   ring: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
     """Abstract cache for ONE attention layer."""
     n = min(length, cfg.window_size) if (ring and cfg.window_size) else length
+    quant = _kv_quantized(cfg)      # raises for mla + kv_quant='bp8'
     if cfg.attention_type == "mla":
         return {
             "ckv": jax.ShapeDtypeStruct((batch, n, cfg.kv_lora_rank), jnp.bfloat16),
             "krope": jax.ShapeDtypeStruct((batch, n, cfg.qk_rope_head_dim), jnp.bfloat16),
             "pos": jax.ShapeDtypeStruct((batch, n), jnp.int32),
         }
+    kh, d = cfg.num_kv_heads, cfg.head_dim
+    if quant:
+        # int8 sign*level codes + one f32 scale per (token, kv-head): the
+        # finest per-block granularity, so appends/writes never re-encode
+        # neighbours and the scale pages with its tokens (same kv_seq axis)
+        return {
+            "k_codes": jax.ShapeDtypeStruct((batch, n, kh, d), jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((batch, n, kh), jnp.float32),
+            "v_codes": jax.ShapeDtypeStruct((batch, n, kh, d), jnp.int8),
+            "v_scale": jax.ShapeDtypeStruct((batch, n, kh), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        }
     return {
-        "k": jax.ShapeDtypeStruct((batch, n, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
-        "v": jax.ShapeDtypeStruct((batch, n, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "k": jax.ShapeDtypeStruct((batch, n, kh, d), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((batch, n, kh, d), jnp.bfloat16),
         "pos": jax.ShapeDtypeStruct((batch, n, ), jnp.int32),
     }
+
+
+def kv_cache_axes(cfg: ModelConfig, prefix: Tuple = ("stack",)) -> Dict[str, Tuple]:
+    """Logical axis names for one layer's cache leaves (the names the
+    paged block pool keys on: "batch" then "kv_seq" right after it)."""
+    def ax(*names):
+        return prefix + ("batch",) + names
+
+    quant = _kv_quantized(cfg)      # raises for mla + kv_quant='bp8'
+    if cfg.attention_type == "mla":
+        return {"ckv": ax("kv_seq", None), "krope": ax("kv_seq", None),
+                "pos": ax("kv_seq")}
+    if quant:
+        return {"k_codes": ax("kv_seq", "kv_heads", None),
+                "k_scale": ax("kv_seq", "kv_heads"),
+                "v_codes": ax("kv_seq", "kv_heads", None),
+                "v_scale": ax("kv_seq", "kv_heads"),
+                "pos": ax("kv_seq")}
+    return {"k": ax("kv_seq", "kv_heads", None),
+            "v": ax("kv_seq", "kv_heads", None),
+            "pos": ax("kv_seq")}
 
 
 def init_cache(spec) -> Dict[str, jax.Array]:
@@ -265,49 +310,95 @@ def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
     q_pos = positions if positions.ndim == 2 else jnp.broadcast_to(
         positions[None], (b, sq))
     new_cache = cache
+    out = None
+    quant = cache is not None and cross_kv is None and _kv_quantized(cfg)
+    if quant:
+        from repro.kernels import attention as kq
+        kc, ks = kq.quantize_kv(k)
+        vc, vs = kq.quantize_kv(v)
+        updates = {"k_codes": kc, "k_scale": ks, "v_codes": vc, "v_scale": vs}
+    else:
+        updates = {"k": k, "v": v}
     if cache is not None and cross_kv is None:
         if sq == 1:  # decode: write one slot, attend over the cache
-            new_cache = _cache_write(cache, {"k": k, "v": v}, q_pos[:, 0])
-            k_all, v_all, kv_pos = new_cache["k"], new_cache["v"], new_cache["pos"]
+            new_cache = _cache_write(cache, updates, q_pos[:, 0])
+            if quant and prefix_len is None:
+                # fused path: codes stream into the kernel and dequantise
+                # in VMEM — the cache is never expanded to bf16/f32 in HBM
+                from repro.kernels import attention as kq
+                qg = q[:, 0].reshape(b, kh, h_loc // kh, d).astype(jnp.float32)
+                qg = qg / jnp.sqrt(jnp.float32(d))
+                o = kq.bp8_decode_attention(
+                    qg, new_cache["k_codes"], new_cache["k_scale"],
+                    new_cache["v_codes"], new_cache["v_scale"],
+                    new_cache["pos"], q_pos[:, 0], window,
+                    softcap=cfg.logit_softcap, causal=causal)
+                out = o.reshape(b, 1, h_loc, -1)
+                k_all = v_all = kv_pos = None
+            elif quant:
+                # prefix-LM decode: rare path, attend the dequantised cache
+                from repro.kernels import attention as kq
+                k_all = kq.dequantize_kv(new_cache["k_codes"],
+                                         new_cache["k_scale"])
+                v_all = kq.dequantize_kv(new_cache["v_codes"],
+                                         new_cache["v_scale"])
+                kv_pos = new_cache["pos"]
+            else:
+                k_all, v_all, kv_pos = (new_cache["k"], new_cache["v"],
+                                        new_cache["pos"])
         elif append:  # chunked prefill: append, attend over the full cache
-            new_cache = _cache_append(cache, {"k": k, "v": v}, q_pos)
-            k_all, v_all, kv_pos = (new_cache["k"], new_cache["v"],
-                                    new_cache["pos"])
+            new_cache = _cache_append(cache, updates, q_pos)
+            if quant:
+                from repro.kernels import attention as kq
+                k_all = kq.dequantize_kv(new_cache["k_codes"],
+                                         new_cache["k_scale"])
+                v_all = kq.dequantize_kv(new_cache["v_codes"],
+                                         new_cache["v_scale"])
+            else:
+                k_all, v_all = new_cache["k"], new_cache["v"]
+            kv_pos = new_cache["pos"]
         else:        # prefill: dense write (ring caches keep the last n
             # tokens at slots pos % n, matching decode's addressing)
-            n = cache["k"].shape[1]
+            n = cache["pos"].shape[1]
             if n < sq:
                 slots = jnp.arange(sq - n, sq) % n
-                new_cache = {
-                    "k": cache["k"].at[:, slots].set(
-                        k[:, sq - n:].astype(cache["k"].dtype)),
-                    "v": cache["v"].at[:, slots].set(
-                        v[:, sq - n:].astype(cache["v"].dtype)),
-                    "pos": cache["pos"].at[:, slots].set(q_pos[:, sq - n:]),
-                }
+                new_cache = {key: cache[key].at[:, slots].set(
+                    val[:, sq - n:].astype(cache[key].dtype))
+                    for key, val in updates.items()}
+                new_cache["pos"] = cache["pos"].at[:, slots].set(
+                    q_pos[:, sq - n:])
             else:
-                new_cache = {
-                    "k": cache["k"].at[:, :sq].set(k.astype(cache["k"].dtype)),
-                    "v": cache["v"].at[:, :sq].set(v.astype(cache["v"].dtype)),
-                    "pos": cache["pos"].at[:, :sq].set(q_pos),
-                }
-            k_all, v_all, kv_pos = k, v, q_pos
+                new_cache = {key: cache[key].at[:, :sq].set(
+                    val.astype(cache[key].dtype))
+                    for key, val in updates.items()}
+                new_cache["pos"] = cache["pos"].at[:, :sq].set(q_pos)
+            if quant:
+                # attend the values the cache actually stores, so decode
+                # over the quantised cache reproduces prefill's logits
+                from repro.kernels import attention as kq
+                k_all = kq.dequantize_kv(kc, ks)
+                v_all = kq.dequantize_kv(vc, vs)
+            else:
+                k_all, v_all = k, v
+            kv_pos = q_pos
     else:
         k_all, v_all = k, v
         kv_pos = (q_pos if cross_kv is None else
                   jnp.broadcast_to(jnp.arange(k.shape[1])[None], (b, k.shape[1])))
 
-    if tp_attn and tpc.kv_mode == mtp.KV_GROUP:
-        # kv_heads < tp: wk/wv are replicated (the full k/v is cheap) and
-        # each device slices the one kv head its contiguous q-head block
-        # maps to — tp % kv_heads == 0 guarantees the block stays inside a
-        # single kv group (plan_stage_tp)
-        kvh = (mtp.tp_index(tpc) * h_loc) // (h // kh)
-        k_all = jax.lax.dynamic_slice_in_dim(k_all, kvh, 1, axis=2)
-        v_all = jax.lax.dynamic_slice_in_dim(v_all, kvh, 1, axis=2)
-    out = sdpa(q, k_all, v_all, q_pos, kv_pos, causal=causal and cross_kv is None,
-               window=window, prefix_len=prefix_len, chunk=cfg.attn_chunk,
-               softcap=cfg.logit_softcap)
+    if out is None:
+        if tp_attn and tpc.kv_mode == mtp.KV_GROUP:
+            # kv_heads < tp: wk/wv are replicated (the full k/v is cheap)
+            # and each device slices the one kv head its contiguous q-head
+            # block maps to — tp % kv_heads == 0 guarantees the block stays
+            # inside a single kv group (plan_stage_tp)
+            kvh = (mtp.tp_index(tpc) * h_loc) // (h // kh)
+            k_all = jax.lax.dynamic_slice_in_dim(k_all, kvh, 1, axis=2)
+            v_all = jax.lax.dynamic_slice_in_dim(v_all, kvh, 1, axis=2)
+        out = sdpa(q, k_all, v_all, q_pos, kv_pos,
+                   causal=causal and cross_kv is None, window=window,
+                   prefix_len=prefix_len, chunk=cfg.attn_chunk,
+                   softcap=cfg.logit_softcap)
     out = dense(out.reshape(b, sq, h_loc * d).astype(x.dtype), p["wo"], mode)
     if tp_attn:
         out = mtp.tp_psum(out, tpc)

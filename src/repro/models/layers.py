@@ -34,6 +34,12 @@ def dense(x: jax.Array, w: jax.Array, mode: str = "bf16",
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
         y = _bpm.bp_matmul_ste(x2, w.astype(jnp.float32), impl=impl)
         y = y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    elif mode == "bp8_fused":
+        from repro.kernels import ops as _kops
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        y = _kops.oisma_matmul_ste(x2, w.astype(jnp.float32))
+        y = y.reshape(*lead, w.shape[-1]).astype(x.dtype)
     elif mode == "fp8":
         xq = _q.fake_quantize_e4m3(x.astype(jnp.float32))
         wq = _q.fake_quantize_e4m3(w.astype(jnp.float32))
@@ -134,11 +140,21 @@ def mlp_apply(p, x: jax.Array, act: str, gated: bool, mode: str) -> jax.Array:
     tp_on = tpc is not None and tpc.shard_ffn
     if tp_on:
         x = mtp.tp_gather(x, tpc)
-    up = dense(x, p["up"], mode)
-    if gated:
-        up = activation(dense(x, p["gate"], mode), act) * up
+    if mode == "bp8_fused" and gated and act in ("silu", "gelu", "relu"):
+        # single-grid fused MLP: up/gate share one in-kernel BP encode of
+        # x and the two (tokens, d_ff) projections never reach HBM
+        from repro.kernels import ops as _kops
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        up = _kops.oisma_mlp_ste(x2, p["up"].astype(jnp.float32),
+                                 p["gate"].astype(jnp.float32), act=act)
+        up = up.reshape(*lead, p["up"].shape[-1]).astype(x.dtype)
     else:
-        up = activation(up, act)
+        up = dense(x, p["up"], mode)
+        if gated:
+            up = activation(dense(x, p["gate"], mode), act) * up
+        else:
+            up = activation(up, act)
     out = dense(up, p["down"], mode)
     if tp_on:
         out = mtp.tp_psum(out, tpc)

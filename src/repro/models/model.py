@@ -366,14 +366,7 @@ class DecoderModel:
 
     def cache_axes(self, batch: int, length: int):
         cfg = self.cfg
-        if cfg.attention_type == "mla":
-            one = {"ckv": ("stack", "batch", "kv_seq", None),
-                   "krope": ("stack", "batch", "kv_seq", None),
-                   "pos": ("stack", "batch", "kv_seq")}
-        else:
-            one = {"k": ("stack", "batch", "kv_seq", "kv_heads", None),
-                   "v": ("stack", "batch", "kv_seq", "kv_heads", None),
-                   "pos": ("stack", "batch", "kv_seq")}
+        one = attn.kv_cache_axes(cfg)
         out = {"layers": one}
         if cfg.first_dense_layers:
             out["dense_layers"] = one
@@ -589,9 +582,7 @@ class EncDecModel:
         return {"self": stk(one), "cross": stk(cross_one)}
 
     def cache_axes(self, batch: int, length: int):
-        one = {"k": ("stack", "batch", "kv_seq", "kv_heads", None),
-               "v": ("stack", "batch", "kv_seq", "kv_heads", None),
-               "pos": ("stack", "batch", "kv_seq")}
+        one = attn.kv_cache_axes(self.cfg)
         cross = {"k": ("stack", "batch", "frames", "kv_heads", None),
                  "v": ("stack", "batch", "frames", "kv_heads", None)}
         return {"self": one, "cross": cross}
@@ -765,10 +756,7 @@ class HybridModel:
     def cache_axes(self, batch: int, length: int):
         mamba = {"conv": ("stack", "stack2", "batch", None, "ffn"),
                  "ssm": ("stack", "stack2", "batch", "heads", None, "state")}
-        a = {"k": ("stack", "batch", "kv_seq", "kv_heads", None),
-             "v": ("stack", "batch", "kv_seq", "kv_heads", None),
-             "pos": ("stack", "batch", "kv_seq")}
-        return {"mamba": mamba, "attn": a}
+        return {"mamba": mamba, "attn": attn.kv_cache_axes(self.cfg)}
 
     def prefill(self, params, batch, cache_len: int):
         tokens = batch["tokens"]
