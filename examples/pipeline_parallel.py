@@ -133,7 +133,7 @@ def composed_tp_in_stage():
                                    num_microbatches=4, mesh=mesh,
                                    batch_axes=("data",))
 
-    with shd.use_rules(mesh, shd.pipeline_rules()):
+    with shd.use_rules(mesh, shd.get_rules("pipeline")):
         (l_p, _), g_p = jax.jit(jax.value_and_grad(
             pipe_loss, has_aux=True))(state["params"], batch)
     (l_s, _), g_s = jax.jit(jax.value_and_grad(

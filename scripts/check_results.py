@@ -38,7 +38,12 @@ Dryrun checks, in order:
      OISMA-engine projection stamp (``roofline.oisma_engine`` —
      ``repro.roofline.model.oisma_engine_projection``), and the stamp is
      not an error record: the engine-projected step time must ride along
-     with the chip roofline, never go stale.
+     with the chip roofline, never go stale;
+  7. NO long_500k record is ``status: "skipped"`` — ring attention over
+     the "seq" mesh axis un-skipped the full-attention long-context
+     cells, and they must never silently rot back — and every seq-bearing
+     (``seq_shards`` > 1) long_500k ok record prices the ring hand-off
+     (``roofline.coll_breakdown.ring_permute``).
 
 Exit code 0 = gate passes; 1 = any violation (all violations printed).
 
@@ -116,6 +121,21 @@ def check(records) -> list:
                           f"roofline.oisma_engine projection stamp")
         elif oe.get("backend") != "oisma_engine" or "error" in oe:
             errors.append(f"{tag}: malformed oisma_engine stamp: {oe!r}")
+
+    for i, r in enumerate(records):
+        if r.get("shape") != "long_500k":
+            continue
+        tag = f"record[{i}] {r.get('arch')}/long_500k/{r.get('mesh')}"
+        if r.get("status") == "skipped":
+            errors.append(f"{tag}: long_500k is skipped — sequence "
+                          f"parallelism (--seq) un-skipped these cells; "
+                          f"re-lower with seq_shards > 1")
+        if (r.get("status") == "ok" and r.get("seq_shards", 0) > 1):
+            coll = (r.get("roofline") or {}).get("coll_breakdown", {})
+            if "ring_permute" not in coll:
+                errors.append(f"{tag}: seq-bearing ok record without the "
+                              f"ring_permute hand-off term in "
+                              f"roofline.coll_breakdown")
     return errors
 
 

@@ -130,12 +130,20 @@ def get_config(arch: str, smoke: bool = False) -> ModelConfig:
     return mod.smoke_config() if smoke else mod.config()
 
 
-def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig,
+                     seq_shards: int = 1) -> Tuple[bool, str]:
     """Whether an (arch, shape) cell is runnable; reason if not.
 
-    Per assignment: long_500k is skipped for pure full-attention archs;
-    encoder-only archs have no decode step (none assigned here).
+    Full-attention archs can't fit long_500k on a data×model×stage layout
+    — unless the launcher brings sequence parallelism (``seq_shards`` > 1):
+    ring attention over a "seq" mesh axis shards the half-million-token KV
+    cache across the ring, which is exactly the regime that used to be
+    skipped.  Sub-quadratic archs never needed the ring (their state is
+    O(1) in sequence length).
     """
-    if shape.name == "long_500k" and not cfg.sub_quadratic:
-        return False, "pure full-attention arch: long_500k needs sub-quadratic attention"
+    if (shape.name == "long_500k" and not cfg.sub_quadratic
+            and seq_shards <= 1):
+        return False, ("pure full-attention arch: long_500k needs "
+                       "sequence parallelism (seq_shards > 1) or "
+                       "sub-quadratic attention")
     return True, ""

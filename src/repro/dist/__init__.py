@@ -16,9 +16,14 @@ Two orthogonal pieces:
     shard over the TP axes, the at-rest PartitionSpecs that carry that
     layout across the shard_map boundary, and the ambient context the
     model layers consult to run on local shards with manual psums.
+  * :mod:`repro.dist.seq` — sequence parallelism: ring attention over a
+    "seq" mesh axis.  An ambient ``use_ring`` context under which the
+    attention layers run their KV-sharded core inside a scoped manual
+    shard_map region (KV blocks or softmax stats rotating via ppermute),
+    while everything around it stays on the auto partitioner.
 
 No module here touches jax device state at import time (same rule as
 ``repro.launch.mesh``), so the dry-run can force a 512-device host platform
 before anything else runs.
 """
-from repro.dist import pipeline, sharding, tp  # noqa: F401
+from repro.dist import pipeline, seq, sharding, tp  # noqa: F401

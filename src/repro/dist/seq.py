@@ -1,0 +1,283 @@
+"""Sequence parallelism: ring attention over a "seq" mesh axis.
+
+The attention *core* in :mod:`repro.models.attention` already knows how to
+ring (``ring_sdpa`` / ``ring_mla``): given per-device KV blocks inside a
+manual ``shard_map`` region, it fills per-block online-softmax partials and
+merges them in canonical order.  This module is the bridge between that
+core and the auto-partitioned model code around it:
+
+  * ``use_ring(mesh)`` installs an ambient :class:`RingCtx` (thread-local,
+    mirroring ``repro.dist.tp``'s context) under which the attention
+    layers *offer* their KV to the ring instead of calling plain ``sdpa``.
+  * ``ring_attend`` / ``ring_attend_mla`` derive the ``shard_map`` in/out
+    specs from the ambient sharding rules (``sharding.current_ctx()``):
+    the KV token dim gets whatever mesh axes the rules give "kv_seq" (or
+    "seq" for cache-less prefill), and that axis tuple *is* the ring.
+    Everything else is resharded on entry so the manual region sees an
+    internally consistent layout — in particular the q heads dim is forced
+    onto the *kv_heads* axes (not the wider "heads" rule), because grouped
+    attention needs each device's q-head block to sit over its own kv
+    heads.  Returns None — graceful fallback to the dense path — whenever
+    the rules, mesh, or divisibility leave the KV unsharded on the ring.
+
+Only the attention core lives in the manual region.  Projections, cache
+writes, MoE and norms stay on the auto partitioner; GSPMD inserts the
+boundary reshards.  This keeps the ring composable with tensor parallelism
+("model" axis), data parallelism, and the pipeline stage axis without any
+of those subsystems knowing the ring exists.  (Do NOT be tempted to run
+the region with ``auto=``-partial shard_map: ``ppermute`` inside a partial
+region hard-crashes the XLA SPMD partitioner on CPU; full-manual over a
+scoped region is the supported composition.)
+
+Schedule selection is automatic: if the rules shard the q sequence over
+the same ring axes (prefill/train), the KV blocks rotate ("kv" schedule);
+if q is replicated across the ring (decode, Sq == 1), the small (m, l,
+acc) stats tuple rotates instead, which is what the roofline's
+``ring_permute`` term prices.  Both schedules produce bitwise-identical
+outputs.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class RingCtx:
+    """Ambient ring context: the mesh and the name of its ring axis."""
+    mesh: Mesh
+    axis: str = "seq"
+
+
+_LOCAL = threading.local()
+
+
+def current_ring() -> Optional[RingCtx]:
+    """The active :class:`RingCtx`, or None outside any ``use_ring``."""
+    return getattr(_LOCAL, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_ring(mesh: Mesh, axis: str = "seq"):
+    """Install a ring context for the trace under it (nests, thread-local).
+
+    Like ``sharding.use_rules`` this wraps *tracing*; the ring schedule is
+    baked into the jaxpr.  The mesh must carry ``axis``.  Attention layers
+    consult ``current_ring()`` and route their KV through ``ring_attend``
+    when a context is live; whether a given tensor actually rings is then
+    decided per-call from the ambient rules (so a ``use_ring`` around a
+    model whose rules never shard "kv_seq" is a no-op, not an error).
+    """
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh {tuple(mesh.shape)} has no {axis!r} axis")
+    prev = current_ring()
+    _LOCAL.ctx = RingCtx(mesh, axis)
+    try:
+        yield _LOCAL.ctx
+    finally:
+        _LOCAL.ctx = prev
+
+
+# ---------------------------------------------------------------------------
+# spec derivation helpers
+# ---------------------------------------------------------------------------
+
+def _axes(entry) -> Tuple[str, ...]:
+    """Normalise one PartitionSpec entry to a tuple of axis names."""
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def _strip(entry, banned):
+    """Drop ``banned`` axes from a spec entry (ring axes may only ever
+    shard the KV token dim; every other dim must be replicated across the
+    ring for the schedules to be valid)."""
+    kept = tuple(a for a in _axes(entry) if a not in banned)
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else kept
+
+
+def pad_kv(k, v, kv_pos, total: int):
+    """Pad (k, v, kv_pos) along the token dim (axis 1) to ``total`` slots.
+
+    Padded slots carry position -1, the same sentinel empty cache slots
+    use, so the mask (``attention._allowed``) drops them and a fully
+    padded block is wiped exactly by the partial merge.  This is how odd
+    sequence remainders ride the ring: pad to the next multiple of the
+    ring size, never touch the math.
+    """
+    pad = total - k.shape[1]
+    if pad <= 0:
+        return k, v, kv_pos
+    wide = [(0, 0), (0, pad)]
+    k = jnp.pad(k, wide + [(0, 0)] * (k.ndim - 2))
+    v = jnp.pad(v, wide + [(0, 0)] * (v.ndim - 2))
+    kv_pos = jnp.pad(kv_pos, wide, constant_values=-1)
+    return k, v, kv_pos
+
+
+def _ring_axes_for(mesh, rules, kv_shape, kv_axes, ring_axis):
+    """The (spec, ring_axes, n) the rules give a KV tensor, or None when
+    its token dim ends up unsharded or off the declared ring axis.
+
+    The token dim (position 1 by convention) is probed rounded UP to the
+    candidate ring size: ``partition_spec``'s divisibility fallback would
+    otherwise replicate an odd-length sequence and the ring would never
+    see it — but odd remainders are exactly what ``pad_kv`` exists for,
+    so divisibility must not veto the spec, only shape the padding.
+    """
+    cand = 1
+    if not isinstance(rules, shd.Rules):
+        rules = shd.Rules(rules)
+    for a in rules.mesh_axes(kv_axes[1]):
+        if a in mesh.shape:
+            cand *= mesh.shape[a]
+    probe = list(kv_shape)
+    if cand > 1:
+        probe[1] = -(-probe[1] // cand) * cand
+    kspec = shd.partition_spec(mesh, rules, tuple(probe), kv_axes)
+    ring_axes = _axes(kspec[1])
+    if not ring_axes or ring_axis not in ring_axes:
+        return None
+    n = 1
+    for a in ring_axes:
+        n *= mesh.shape[a]
+    if n <= 1:
+        return None
+    return kspec, ring_axes, n
+
+
+# ---------------------------------------------------------------------------
+# GQA ring entry point
+# ---------------------------------------------------------------------------
+
+def ring_attend(q, k, v, q_pos, kv_pos, *, kv_logical="kv_seq", causal=True,
+                window=None, prefix_len=None, softcap=None):
+    """Ring-attend ``q`` over a KV whose token dim the ambient rules shard.
+
+    Global shapes: q (B,Sq,H,D), k/v (B,Skv,KH,D[v]), q_pos (B,Sq),
+    kv_pos (B,Skv).  Returns the (B,Sq,H,Dv) attention output, or None
+    when the ring does not apply (no contexts, KV token dim unsharded,
+    or a layout the schedules cannot serve) — callers fall back to the
+    dense ``sdpa`` path on None.
+    """
+    ctx = current_ring()
+    sctx = shd.current_ctx()
+    if ctx is None or sctx is None:
+        return None
+    mesh, rules = ctx.mesh, sctx.rules
+    got = _ring_axes_for(mesh, rules, k.shape,
+                         ("batch", kv_logical, "kv_heads", None), ctx.axis)
+    if got is None:
+        return None
+    kspec, ring_axes, n = got
+
+    skv = k.shape[1]
+    k, v, kv_pos = pad_kv(k, v, kv_pos, skv + (-skv) % n)
+
+    qspec0 = shd.partition_spec(mesh, rules, q.shape,
+                                ("batch", "seq", "heads", None))
+    q_seq = _axes(qspec0[1])
+    if any(a in ring_axes for a in q_seq):
+        if q_seq != ring_axes:
+            return None             # q sharded over a mismatched ring
+        rotate = "kv"
+        q_seq_entry = qspec0[1]
+    else:
+        rotate = "stats"
+        q_seq_entry = _strip(qspec0[1], set(ring_axes))
+
+    banned = set(ring_axes)
+    batch = _strip(kspec[0], banned)
+    kvh = _strip(kspec[2], banned)
+    # grouped attention: q's head blocks must sit over their own kv heads,
+    # so q shards its heads dim by the kv_heads axes (kh | h ⇒ divisible)
+    kvh_axes = _axes(kvh)
+    if any(a in kvh_axes for a in _axes(q_seq_entry)):
+        return None
+    kspec = P(batch, kspec[1], kvh, None)
+    qspec = P(batch, q_seq_entry, kvh, None)
+    specs = [qspec, kspec, kspec, P(batch, q_seq_entry), P(batch, kspec[1])]
+    operands = [q, k, v, q_pos, kv_pos]
+    if prefix_len is not None:
+        specs.append(P(batch))
+        operands.append(prefix_len)
+
+    axis_name = ring_axes if len(ring_axes) > 1 else ring_axes[0]
+    from repro.models import attention as A
+
+    def local(*ops):
+        qb, kb, vb, qp, kp = ops[:5]
+        pl = ops[5] if len(ops) > 5 else None
+        return A.ring_sdpa(qb, kb, vb, qp, kp, axis_name=axis_name,
+                           n_blocks=n, rotate=rotate, causal=causal,
+                           window=window, prefix_len=pl, softcap=softcap)
+
+    f = shard_map(local, mesh=mesh, in_specs=tuple(specs), out_specs=qspec,
+                  check_rep=False)
+    return f(*operands)
+
+
+# ---------------------------------------------------------------------------
+# absorbed-MLA ring entry point
+# ---------------------------------------------------------------------------
+
+def ring_attend_mla(qa, q_rope, ckv, krope, q_pos, kv_pos, *, window=None,
+                    scale):
+    """Ring the absorbed-MLA decode over a seq-sharded latent cache.
+
+    Global shapes: qa (B,Sq,H,R) (W_uk already absorbed), q_rope
+    (B,Sq,H,P), ckv (B,Skv,R), krope (B,Skv,P).  Returns o_lat
+    (B,Sq,H,R) or None when the ring does not apply.  The latent is
+    shared across heads, so the heads dim shards by the full "heads"
+    rule (minus the ring axes) rather than kv_heads.
+    """
+    ctx = current_ring()
+    sctx = shd.current_ctx()
+    if ctx is None or sctx is None:
+        return None
+    mesh, rules = ctx.mesh, sctx.rules
+    got = _ring_axes_for(mesh, rules, ckv.shape, ("batch", "kv_seq", None),
+                         ctx.axis)
+    if got is None:
+        return None
+    cspec, ring_axes, n = got
+
+    skv = ckv.shape[1]
+    ckv, krope, kv_pos = pad_kv(ckv, krope, kv_pos, skv + (-skv) % n)
+
+    qspec0 = shd.partition_spec(mesh, rules, qa.shape,
+                                ("batch", "seq", "heads", None))
+    banned = set(ring_axes)
+    batch = _strip(cspec[0], banned)
+    heads = _strip(qspec0[2], banned)
+    q_seq = _strip(qspec0[1], banned)
+    if any(a in _axes(heads) for a in _axes(q_seq)):
+        return None
+    cspec = P(batch, cspec[1], None)
+    qspec = P(batch, q_seq, heads, None)
+    specs = (qspec, qspec, cspec, cspec, P(batch, q_seq), P(batch, cspec[1]))
+
+    axis_name = ring_axes if len(ring_axes) > 1 else ring_axes[0]
+    from repro.models import attention as A
+
+    def local(qab, qrb, cb, kb, qp, kp):
+        return A.ring_mla(qab, qrb, cb, kb, qp, kp, axis_name=axis_name,
+                          n_blocks=n, rotate="stats", window=window,
+                          scale=scale)
+
+    f = shard_map(local, mesh=mesh, in_specs=specs, out_specs=qspec,
+                  check_rep=False)
+    return f(qa, q_rope, ckv, krope, q_pos, kv_pos)

@@ -24,20 +24,26 @@ The same rules drive three call sites:
     ``with_sharding_constraint`` inside model code, resolving against the
     ambient ``use_rules(mesh, rules)`` context (and is a no-op when no
     context is active, so single-device tests need no mesh at all);
-  * presets — ``train_rules`` / ``prefill_rules`` / ``decode_rules`` are
-    the production mappings, registered in ``RULE_PRESETS`` for the
-    dry-run's ``--rules`` sharding experiments.
+  * presets — ``get_rules(phase, **opts)`` is the single entry point to
+    the production mappings (phases: train / prefill / decode / pipeline /
+    dp_only / sequence), backed by a ``register_rules`` registry.  The
+    historical free functions (``train_rules`` …) survive as thin
+    deprecated aliases; ``RULE_PRESETS`` remains the zero-arg callable
+    view the dry-run CLI enumerates.
 
 Rules are data, not code: a preset is just a ``Rules`` dict, so sharding
 experiments (e.g. ``dp_only``) are one-line additions that never touch
-model code.
+model code — and a new preset is one ``register_rules`` entry, not a new
+special case at every call site.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import threading
-from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+import warnings
+from typing import (Any, Callable, Dict, Mapping, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 from jax.sharding import Mesh, NamedSharding
@@ -217,10 +223,50 @@ def shard(x: jax.Array, *axes: Optional[str],
 
 
 # ---------------------------------------------------------------------------
-# Production presets
+# Production presets: one registry, one entry point
 # ---------------------------------------------------------------------------
 
-def train_rules() -> Rules:
+_RULES_REGISTRY: Dict[str, Callable[..., Rules]] = {}
+
+
+def register_rules(phase: str, fn: Optional[Callable[..., Rules]] = None):
+    """Register a ``Rules`` factory under ``phase``.
+
+    Usable as a decorator (``@register_rules("train")``) or a direct call.
+    Registering an existing phase replaces it, so downstream projects can
+    override a production layout without touching this module.
+    """
+    def deco(f: Callable[..., Rules]) -> Callable[..., Rules]:
+        _RULES_REGISTRY[phase] = f
+        return f
+    return deco if fn is None else deco(fn)
+
+
+def rule_phases() -> Tuple[str, ...]:
+    """All registered phase names, sorted."""
+    return tuple(sorted(_RULES_REGISTRY))
+
+
+def get_rules(phase: str, **opts) -> Rules:
+    """The single entry point to the production sharding layouts.
+
+    ``phase`` selects a registered preset ("train", "prefill", "decode",
+    "pipeline", "dp_only", "sequence", …); ``opts`` are forwarded to the
+    preset factory (only "decode" takes any: ``batch`` and ``data_size``
+    for its adaptive fold).  Returns a fresh ``Rules`` dict — mutating the
+    result never leaks into the registry.
+    """
+    try:
+        fn = _RULES_REGISTRY[phase]
+    except KeyError:
+        raise ValueError(
+            f"unknown parallelism phase {phase!r}; registered phases: "
+            f"{list(rule_phases())}") from None
+    return fn(**opts)
+
+
+@register_rules("train")
+def _train_rules_impl() -> Rules:
     """FSDP + tensor-parallel training layout.
 
     Batch over ("pod", "data"); the contraction-orthogonal weight dims
@@ -243,7 +289,8 @@ def train_rules() -> Rules:
     })
 
 
-def prefill_rules() -> Rules:
+@register_rules("prefill")
+def _prefill_rules_impl() -> Rules:
     """Inference prefill layout: tensor-parallel weights, data-parallel batch.
 
     No ZeRO ("d_model" replicated): weights are read-only at inference, so
@@ -261,16 +308,16 @@ def prefill_rules() -> Rules:
     })
 
 
-def decode_rules(batch: int, data_size: int) -> Rules:
+@register_rules("decode")
+def _decode_rules_impl(batch: int = 1, data_size: int = 1) -> Rules:
     """Decode layout, adaptive to how well the batch fills the data axis.
 
     ``batch`` is the global decode batch; ``data_size`` the "data" mesh-axis
     size.  When the batch tiles the data axis, decode looks like prefill
     (batch over ("pod", "data"), heads over "model").  When it cannot
-    (small-batch / long-context decode, e.g. the ``long_500k`` shape with
-    batch 1), the data axis would idle — so it is folded into model
-    parallelism instead: weight and head dims shard over ("data", "model")
-    jointly and the batch replicates.
+    (small-batch / long-context decode), the data axis would idle — so it
+    is folded into model parallelism instead: weight and head dims shard
+    over ("data", "model") jointly and the batch replicates.
     """
     if data_size <= 1 or (batch >= data_size and batch % data_size == 0):
         return Rules({
@@ -288,10 +335,11 @@ def decode_rules(batch: int, data_size: int) -> Rules:
     })
 
 
-def pipeline_rules() -> Rules:
+@register_rules("pipeline")
+def _pipeline_rules_impl() -> Rules:
     """Pipelined training layout for a ("stage", "data", "model") mesh.
 
-    ``train_rules`` plus one addition: the models' stacked-layer leading
+    The train layout plus one addition: the models' stacked-layer leading
     dimension (logical name "stack") shards over the "stage" mesh axis, so
     each stage device holds exactly its contiguous block of layers at rest
     — ``stack_stages`` inside the pipelined train step is then a local
@@ -306,30 +354,107 @@ def pipeline_rules() -> Rules:
     keeps non-divisible stacks (e.g. a 1-layer dense prologue, or
     scan-group stacks of the non-decoder families) replicated over "stage"
     instead of erroring, and on stage-less meshes the mesh-presence
-    fallback makes this preset degrade to exactly ``train_rules``.  The
+    fallback makes this preset degrade to exactly the train layout.  The
     AdamW moments inherit the stage sharding through ``opt_state_axes``.
     """
-    rules = train_rules()
+    rules = _train_rules_impl()
     rules["stack"] = "stage"
     return rules
 
 
-def dp_only_rules() -> Rules:
+@register_rules("dp_only")
+def _dp_only_rules_impl() -> Rules:
     """Pure data parallelism: every mesh axis acts as batch; weights
     replicate.  The dry-run's ``--rules dp_only`` baseline for measuring
     what tensor parallelism buys (see ``launch/dryrun.py``)."""
     return Rules({"batch": ("pod", "data", "model")})
 
 
-#: Named presets for ``launch/dryrun.py --rules <name>``: zero-arg
-#: callables only.  Deliberately excludes "default" — that is the CLI's
-#: per-shape-kind selection (train/prefill/adaptive ``decode_rules``, which
-#: needs shape context), resolved in ``dryrun._rules_for``, not a preset.
-#: "sp" names the sequence-parallel experiment layout from the hillclimb
-#: A2 iteration (``scripts/hillclimb.py``, results/hc_qwen_sp.json); that
-#: experiment was confirmed and promoted into the default train layout, so
-#: the name resolves to ``train_rules`` — kept so the cited run stays
-#: reproducible.
+@register_rules("sequence")
+def _sequence_rules_impl() -> Rules:
+    """Long-context sequence-parallel layout for a ("seq", "data", "model")
+    mesh (``make_production_mesh(seq_shards=…)``) — registry-only, no free-
+    function alias (it postdates the deprecation of that style).
+
+    The KV cache's token dimension (logical "kv_seq") shards over the
+    "seq" mesh axis; attention over the sharded cache runs as a ring
+    (``repro.dist.seq`` + ``repro.models.attention.ring_sdpa``) inside a
+    manual ``shard_map`` region, while every projection stays on the auto
+    partitioner.  Prefill/train activations ("seq") shard over the same
+    axis, so ring attention with *queries* sharded composes too.  Weight
+    dims fold over ("seq", "data", "model") — decode at batch 1 leaves
+    all three axes free for weights, exactly like ``decode_rules``'s
+    ("data", "model") fold, one axis wider.  "kv_heads" additionally
+    offers "model" so caches with TP-divisible head counts shard twice.
+    """
+    return Rules({
+        "batch": ("pod", "data"),
+        "kv_seq": "seq",
+        "seq": "seq",
+        "ffn": ("seq", "data", "model"),
+        "heads": ("seq", "data", "model"),
+        "kv_heads": "model",
+        "vocab": ("seq", "data", "model"),
+        "experts": ("seq", "data", "model"),
+    })
+
+
+# --- deprecated free-function aliases -------------------------------------
+# The five historical preset functions delegate to the registry.  They
+# emit DeprecationWarning (new call sites must use ``get_rules``) but keep
+# their exact signatures and behaviour so existing callers and tests stay
+# green.  ``sp`` is the hillclimb-A2 sequence-parallel *train* experiment
+# that was promoted into the default train layout — the name resolves to
+# the same rules so the cited run (results/hc_qwen_sp.json) stays
+# reproducible.  It is distinct from the "sequence" phase above (the
+# long-context ring-attention layout).
+register_rules("sp", _train_rules_impl)
+
+
+def _deprecated_alias(name: str, phase: str) -> None:
+    warnings.warn(
+        f"repro.dist.sharding.{name}() is deprecated; use "
+        f"get_rules({phase!r}) instead", DeprecationWarning, stacklevel=3)
+
+
+def train_rules() -> Rules:
+    """Deprecated alias for ``get_rules("train")``."""
+    _deprecated_alias("train_rules", "train")
+    return get_rules("train")
+
+
+def prefill_rules() -> Rules:
+    """Deprecated alias for ``get_rules("prefill")``."""
+    _deprecated_alias("prefill_rules", "prefill")
+    return get_rules("prefill")
+
+
+def decode_rules(batch: int, data_size: int) -> Rules:
+    """Deprecated alias for ``get_rules("decode", batch=…, data_size=…)``."""
+    _deprecated_alias("decode_rules", "decode")
+    return get_rules("decode", batch=batch, data_size=data_size)
+
+
+def pipeline_rules() -> Rules:
+    """Deprecated alias for ``get_rules("pipeline")``."""
+    _deprecated_alias("pipeline_rules", "pipeline")
+    return get_rules("pipeline")
+
+
+def dp_only_rules() -> Rules:
+    """Deprecated alias for ``get_rules("dp_only")``."""
+    _deprecated_alias("dp_only_rules", "dp_only")
+    return get_rules("dp_only")
+
+
+#: Zero-arg callable view of the presets for ``launch/dryrun.py --rules``.
+#: Deliberately excludes "default" — that is the CLI's per-shape-kind
+#: selection (train/prefill/adaptive decode, which needs shape context),
+#: resolved in ``dryrun._rules_for`` — and excludes "sequence", which the
+#: dry-run engages through ``--seq`` (it needs a seq-bearing mesh, not
+#: just a rules swap).  Values are the deprecated aliases on purpose:
+#: identity assertions in the pre-registry tests
+#: (``RULE_PRESETS["pipeline"] is pipeline_rules``) remain true.
 RULE_PRESETS = {
     "train": train_rules,
     "prefill": prefill_rules,

@@ -17,6 +17,8 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512")
 
 import argparse
+import contextlib
+import dataclasses
 import functools
 import json
 import time
@@ -31,7 +33,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.dist import sharding as shd
 from repro.launch.inputs import batch_axes, input_specs
 from repro.launch.mesh import make_production_mesh, mesh_axis_size
-from repro.launch.results import cell_key
+from repro.launch.results import cell_key, is_canonical
 from repro.models import build
 from repro.models.params import abstract_tree, axes_tree
 from repro.optim.optimizer import (OptimizerConfig, abstract_opt_state,
@@ -47,18 +49,22 @@ def _opt_config(cfg: ModelConfig) -> OptimizerConfig:
         moment_dtype=jnp.bfloat16 if big else jnp.float32)
 
 
-def _rules_for(shape: ShapeConfig, mesh, preset: str = "default") -> shd.Rules:
+def _rules_for(shape: ShapeConfig, mesh, preset: str = "default",
+               seq_shards: int = 0) -> shd.Rules:
     if preset != "default":
         if preset not in shd.RULE_PRESETS:
             raise ValueError(
                 f"unknown rules preset {preset!r}; valid: "
                 f"{sorted(shd.RULE_PRESETS)}")
-        return shd.RULE_PRESETS[preset]()
+        return shd.get_rules(preset)
+    if seq_shards > 1:
+        return shd.get_rules("sequence")
     if shape.kind == "train":
-        return shd.train_rules()
+        return shd.get_rules("train")
     if shape.kind == "prefill":
-        return shd.prefill_rules()
-    return shd.decode_rules(shape.global_batch, mesh_axis_size(mesh, "data"))
+        return shd.get_rules("prefill")
+    return shd.get_rules("decode", batch=shape.global_batch,
+                         data_size=mesh_axis_size(mesh, "data"))
 
 
 def _parse_mesh_shape(mesh_shape: str):
@@ -88,13 +94,29 @@ def _batch_dp_axes(mesh, rules: shd.Rules, global_batch: int):
     return (entry,) if isinstance(entry, str) else tuple(entry)
 
 
-#: reduced shapes for --smoke mode (structure-identical, fast compile)
-SMOKE_SHAPES = {
-    "train_4k": ShapeConfig("train_4k", "train", 128, 32),
-    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 256, 32),
-    "decode_32k": ShapeConfig("decode_32k", "decode", 256, 32),
-    "long_500k": ShapeConfig("long_500k", "decode", 2048, 1),
-}
+def smoke_shapes(proxy_seq: int = 2048) -> Dict[str, ShapeConfig]:
+    """Reduced shapes for --smoke mode (structure-identical, fast compile).
+
+    Derived from the canonical ``SHAPES`` via ``dataclasses.replace`` so
+    name/kind/identity have a single source of truth (re-declaring
+    ``ShapeConfig`` literals here once let long_500k silently drift from
+    the canonical 524_288 definition).  The long_500k smoke proxy length
+    is a deliberate reduction, exposed as ``--proxy-seq``.
+    """
+    return {
+        "train_4k": dataclasses.replace(
+            SHAPES["train_4k"], seq_len=128, global_batch=32),
+        "prefill_32k": dataclasses.replace(
+            SHAPES["prefill_32k"], seq_len=256, global_batch=32),
+        "decode_32k": dataclasses.replace(
+            SHAPES["decode_32k"], seq_len=256, global_batch=32),
+        "long_500k": dataclasses.replace(
+            SHAPES["long_500k"], seq_len=proxy_seq),
+    }
+
+
+#: default --smoke shape set (kept as a constant for importers)
+SMOKE_SHAPES = smoke_shapes()
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -102,7 +124,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                compile_only: bool = True, smoke: bool = False,
                rules_preset: str = "default",
                mesh_shape: Optional[str] = None,
-               pipeline_stages: int = 0) -> Dict[str, Any]:
+               pipeline_stages: int = 0, seq_shards: int = 0,
+               proxy_seq: int = 2048) -> Dict[str, Any]:
     """Lower + compile one cell; returns the roofline record.
 
     ``mesh_shape`` ("data,model", e.g. "64,4") reshapes the 256 chips/pod
@@ -110,16 +133,20 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     ``pipeline_stages`` > 0 builds a stage-bearing (S, 16/S, 16) per-pod
     mesh and lowers the *pipelined* train step (train shapes, decoder
     family only); the record carries the stage count, pipeline
-    microbatches, and bubble fraction.
+    microbatches, and bubble fraction.  ``seq_shards`` > 1 builds a
+    seq-bearing (Q, 16/Q, 16) per-pod mesh, applies the "sequence" rules
+    preset and traces under ``repro.dist.seq.use_ring`` — ring attention
+    over the seq-sharded KV cache, which is what makes long_500k lower
+    for full-attention archs.  ``proxy_seq`` is the --smoke long_500k
+    proxy length (see ``smoke_shapes``).
     """
     cfg = get_config(arch, smoke=smoke)
     if overrides:
-        import dataclasses as _dc
-        cfg = _dc.replace(cfg, **overrides)
-    shape = (SMOKE_SHAPES if smoke else SHAPES)[shape_name]
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = (smoke_shapes(proxy_seq) if smoke else SHAPES)[shape_name]
     base = {"arch": arch, "shape": shape_name,
             "mesh": "multi" if multi_pod else "single"}
-    ok, reason = shape_applicable(cfg, shape)
+    ok, reason = shape_applicable(cfg, shape, seq_shards=seq_shards or 1)
     if not ok:
         return {**base, "status": "skipped", "reason": reason}
     model = build(cfg)
@@ -133,6 +160,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         if mesh_shape:
             return {**base, "status": "skipped",
                     "reason": "pipeline: incompatible with --mesh-shape"}
+    if seq_shards > 1 and (pipeline_stages or mesh_shape):
+        return {**base, "status": "skipped",
+                "reason": "seq: incompatible with --pipeline/--mesh-shape"}
 
     if mesh_shape:
         dd, mm = _parse_mesh_shape(mesh_shape)
@@ -141,12 +171,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         else:
             mesh = jax.make_mesh((dd, mm), ("data", "model"))
     else:
-        mesh = make_production_mesh(multi_pod=multi_pod,
-                                    pipeline_stages=pipeline_stages or 1)
+        mesh = make_production_mesh(
+            multi_pod=multi_pod, pipeline_stages=pipeline_stages or 1,
+            seq_shards=seq_shards if seq_shards > 1 else 1)
     chips = mesh.devices.size
-    rules = _rules_for(shape, mesh, rules_preset)
+    rules = _rules_for(shape, mesh, rules_preset,
+                       seq_shards=seq_shards if seq_shards > 1 else 0)
     if pipeline_stages and rules_preset == "default":
-        rules = shd.pipeline_rules()
+        rules = shd.get_rules("pipeline")
     schema = model.schema()
     aparams = abstract_tree(schema)
     paxes = axes_tree(schema)
@@ -159,8 +191,13 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         abatch, baxes,
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
+    if seq_shards > 1:
+        from repro.dist import seq as msq
+        ring_cm = msq.use_ring(mesh)
+    else:
+        ring_cm = contextlib.nullcontext()
     t0 = time.time()
-    with shd.use_rules(mesh, rules):
+    with shd.use_rules(mesh, rules), ring_cm:
         if shape.kind == "train":
             opt_cfg = _opt_config(cfg)
             astate = {"params": aparams,
@@ -280,6 +317,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     dd = mesh_axis_size(mesh, "data")
     mm = mesh_axis_size(mesh, "model")
     stages = mesh_axis_size(mesh, "stage") if pipeline_stages else 1
+    seqs = mesh_axis_size(mesh, "seq")
     if pipeline_stages:
         # composed (stage, data, model) layout: since TP runs inside the
         # stage bodies (repro.dist.tp), the lowered step really does
@@ -301,7 +339,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 dd *= mesh_axis_size(mesh, a)
         mm = 1
     mesh_spec = MeshSpec(pod=2 if multi_pod else 1, data=dd, model=mm,
-                         stage=stages)
+                         stage=stages, seq=seqs)
     accum = 1
     moment_bytes = 4
     if shape.kind == "train":
@@ -352,11 +390,26 @@ def main():
                     help="pipeline stage count S > 1: lower the pipelined "
                          "train step on a (S, 16/S, 16) per-pod stage mesh "
                          "(train shapes, decoder-family archs)")
+    ap.add_argument("--seq", type=int, default=0,
+                    help="sequence shards Q: ring attention on a "
+                         "(Q, 16/Q, 16) per-pod seq mesh.  Default 0 = "
+                         "auto: 16 for long_500k cells of full-attention "
+                         "archs (the formerly skipped cells), off "
+                         "elsewhere.  --seq 1 disables the ring "
+                         "explicitly (long_500k skips again)")
+    ap.add_argument("--proxy-seq", type=int, default=2048,
+                    help="--smoke proxy length for the long_500k shape "
+                         "(the canonical 524288 stays the sweep truth)")
     args = ap.parse_args()
 
     if args.pipeline and (args.pipeline < 2 or 16 % args.pipeline):
         ap.error(f"--pipeline {args.pipeline}: stage count must be >= 2 "
                  f"and divide the 16-way data axis")
+    if args.seq and (args.seq < 1 or 16 % args.seq):
+        ap.error(f"--seq {args.seq}: sequence shards must divide the "
+                 f"16-way data axis")
+    if args.seq > 1 and (args.pipeline or args.mesh_shape):
+        ap.error("--seq is incompatible with --pipeline/--mesh-shape")
 
     if args.mesh_shape:  # fail fast, before any cell writes a record
         try:
@@ -396,11 +449,23 @@ def main():
     done = {cell_key(r) for r in results if r.get("status") != "error"}
 
     for arch, shape, multi in cells:
+        # sequence-shard policy: explicit --seq wins; auto (0) turns the
+        # ring on only where it is load-bearing — the long_500k cells of
+        # full-attention archs, exactly the cells that used to skip.
+        # --seq 1 explicitly disables the ring (the skip comes back).
+        if args.seq:
+            seq_eff = args.seq
+        elif (shape == "long_500k"
+              and not get_config(arch, smoke=args.smoke).sub_quadratic):
+            seq_eff = 16
+        else:
+            seq_eff = 0
         key = cell_key({
             "arch": arch, "shape": shape,
             "mesh": "multi" if multi else "single", "rules": args.rules,
             "mesh_shape": args.mesh_shape or "",
             "pipeline_stages": args.pipeline,
+            "seq_shards": seq_eff if seq_eff > 1 else 0,
             "overrides": {k: str(v) for k, v in overrides.items()}})
         if key in done:
             print(f"[skip-done] {key}")
@@ -420,7 +485,9 @@ def main():
                                  compile_only=not args.lower_only,
                                  smoke=args.smoke, rules_preset=args.rules,
                                  mesh_shape=args.mesh_shape,
-                                 pipeline_stages=args.pipeline)
+                                 pipeline_stages=args.pipeline,
+                                 seq_shards=seq_eff,
+                                 proxy_seq=args.proxy_seq)
             finally:
                 signal.alarm(0)
         except Exception as e:
@@ -435,6 +502,8 @@ def main():
         rec["mesh_shape"] = args.mesh_shape or ""
         if args.pipeline:   # also on skips/errors, so the key matches
             rec.setdefault("pipeline_stages", args.pipeline)
+        if seq_eff > 1:     # seq-bearing cells stamp their shard count
+            rec.setdefault("seq_shards", seq_eff)
         if overrides:
             rec.setdefault("overrides",
                            {k: str(v) for k, v in overrides.items()})
@@ -453,7 +522,16 @@ def main():
                     and (cell_key(r) == cell_key(rec)
                          or ("rules" not in r
                              and r.get("mesh_shape", "") == rec["mesh_shape"]
-                             and rec["rules"] == "default")))]
+                             and rec["rules"] == "default")
+                         # a seq-bearing ok record retires the canonical
+                         # skip it un-skips (their cell_keys differ only
+                         # in seq_shards, so the plain dedup misses it)
+                         or (rec.get("status") == "ok"
+                             and rec.get("seq_shards", 0) > 1
+                             and rec["rules"] == "default"
+                             and r.get("status") == "skipped"
+                             and is_canonical(r)
+                             and not r.get("seq_shards"))))]
         results.append(rec)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)

@@ -10,7 +10,15 @@ axis: per pod, (S, 16 // S, 16) over ("stage", "data", "model").  The
 pipeline consumes "stage" via shard_map (repro.dist.pipeline); "data"
 keeps sharding the batch inside the pipeline (``batch_axes``); "model"
 still tensor-shards the non-pipelined portions (embedding, logits/xent)
-and the at-rest parameter layout (``pipeline_rules``).
+and the at-rest parameter layout (the "pipeline" rules preset).
+
+Seq-bearing meshes (``seq_shards > 1``) carve a "seq" axis out of the data
+axis the same way: per pod, (Q, 16 // Q, 16) over ("seq", "data", "model").
+Ring attention (repro.dist.seq) consumes "seq" via a scoped shard_map;
+the "sequence" rules preset shards the KV cache's token dim over it and
+folds weights over whatever the batch leaves idle.  "stage" and "seq" are
+mutually exclusive carvings of the same 16-way budget — pipelining is a
+train-path construct, sequence parallelism a long-context inference one.
 """
 from __future__ import annotations
 
@@ -18,36 +26,53 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False,
-                         pipeline_stages: int = 1):
+                         pipeline_stages: int = 1, seq_shards: int = 1):
     """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods.
 
     ``pipeline_stages`` > 1 prepends a stage axis per pod, shrinking the
-    data axis: (S, 16 // S, 16) — S must divide 16.
+    data axis: (S, 16 // S, 16) — S must divide 16.  ``seq_shards`` > 1
+    likewise prepends a "seq" axis: (Q, 16 // Q, 16) — Q must divide 16,
+    and cannot combine with ``pipeline_stages`` (one carving at a time).
     """
     s = pipeline_stages
-    if s > 1:
-        assert 16 % s == 0, f"pipeline_stages={s} must divide the 16-way data axis"
-        shape = (2, s, 16 // s, 16) if multi_pod else (s, 16 // s, 16)
-        axes = (("pod", "stage", "data", "model") if multi_pod
-                else ("stage", "data", "model"))
+    q = seq_shards
+    if s > 1 and q > 1:
+        raise ValueError("stage- and seq-carvings of the data axis are "
+                         f"mutually exclusive (got stages={s}, seq={q})")
+    if s > 1 or q > 1:
+        first = ("stage", s) if s > 1 else ("seq", q)
+        name, size = first
+        assert 16 % size == 0, (
+            f"{name}={size} must divide the 16-way data axis")
+        shape = (2, size, 16 // size, 16) if multi_pod else (size, 16 // size, 16)
+        axes = (("pod", name, "data", "model") if multi_pod
+                else (name, "data", "model"))
         return jax.make_mesh(shape, axes)
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1, stages: int = 1):
+def make_host_mesh(model: int = 1, stages: int = 1, seq: int = 1):
     """Whatever this host offers (tests / examples).
 
-    (n // model, model) over ("data", "model"), or with ``stages`` > 1 a
+    (n // model, model) over ("data", "model"); with ``stages`` > 1 a
     stage-bearing (stages, n // (stages * model), model) mesh over
-    ("stage", "data", "model").
+    ("stage", "data", "model"); with ``seq`` > 1 a seq-bearing
+    (seq, n // (seq * model), model) mesh over ("seq", "data", "model").
     """
     n = len(jax.devices())
+    if stages > 1 and seq > 1:
+        raise ValueError("stage- and seq-bearing host meshes are mutually "
+                         f"exclusive (got stages={stages}, seq={seq})")
     if stages > 1:
         assert n % (stages * model) == 0, (n, stages, model)
         return jax.make_mesh((stages, n // (stages * model), model),
                              ("stage", "data", "model"))
+    if seq > 1:
+        assert n % (seq * model) == 0, (n, seq, model)
+        return jax.make_mesh((seq, n // (seq * model), model),
+                             ("seq", "data", "model"))
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))
 

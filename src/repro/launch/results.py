@@ -19,12 +19,15 @@ def cell_key(rec: Dict[str, Any]) -> Tuple:
     A cell is (arch, shape, mesh) plus the experiment stamps — rules
     preset, per-pod mesh reshape, the stage axis (pipeline stage count; 0
     = unpipelined, so pipelined and non-pipelined cells of one config
-    never supersede each other), and config overrides.  Unstamped legacy
-    records (written before stamping existed) get ``rules=None`` and so
-    never collide with freshly stamped keys.
+    never supersede each other), the seq axis (sequence shards; 0 =
+    no ring, so legacy records keep their exact keys), and config
+    overrides.  Unstamped legacy records (written before stamping
+    existed) get ``rules=None`` and so never collide with freshly
+    stamped keys.
     """
     return (rec["arch"], rec["shape"], rec["mesh"], rec.get("rules"),
             rec.get("mesh_shape", ""), int(rec.get("pipeline_stages", 0)),
+            int(rec.get("seq_shards", 0)),
             json.dumps(rec.get("overrides", {}), sort_keys=True))
 
 

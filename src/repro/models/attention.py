@@ -120,6 +120,235 @@ def sdpa(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
 
 
 # ---------------------------------------------------------------------------
+# ring attention (sequence parallelism over a "seq" mesh axis)
+#
+# The KV sequence lives sharded across a ring of devices; each device owns
+# one contiguous block.  Attention over the full sequence is recovered from
+# per-block online-softmax partials (m, l, acc) that are merged in canonical
+# block order, so the result is bitwise identical no matter which device
+# computed which block or in which order the ring delivered them.  Two
+# schedules produce the same partials:
+#
+#   * rotate="kv"    — queries stay put (sharded or replicated); the KV
+#                      blocks travel the ring via ppermute (n-1 hops).
+#                      The classic ring-attention schedule for prefill.
+#   * rotate="stats" — each device computes its local block's partial once
+#                      and the small (m, l, acc) tuple travels the ring
+#                      instead.  For decode (Sq == 1) this moves
+#                      O(heads * head_dim) bytes per hop instead of the
+#                      KV block — the schedule the roofline prices.
+#
+# Causal masking, sliding windows, prefix-LM prefixes and empty cache
+# slots all come from the absolute-position mask (`_allowed`): a block
+# whose scores are fully masked yields m = NEG_INF and is wiped exactly
+# (alpha = exp(NEG_INF - m_finite) == 0.0) by the merge, so shard
+# boundaries never need causal special-casing and striped layouts are
+# just a different block->position assignment.
+#
+# These functions run INSIDE a manual `shard_map` region (see
+# repro.dist.seq, which derives the in/out specs from the ambient sharding
+# rules and wraps them); `ring_reference` is the single-device oracle the
+# equivalence tests pin against, built from the *same* per-block math and
+# merge so oracle-vs-ring is exact, not merely close.
+# ---------------------------------------------------------------------------
+
+def _block_partials(qg, kb, vb, q_pos, kp_b, *, causal, window, prefix_len,
+                    softcap):
+    """Online-softmax partial for one KV block.
+
+    qg: (B,KH,G,Sq,D) pre-scaled f32 queries; kb: (B,KH,c,D); vb: (B,KH,c,Dv);
+    kp_b: (B,c) absolute positions (-1 = empty slot).  Returns
+    (m, l, acc) with shapes (B,KH,G,Sq), (B,KH,G,Sq), (B,KH,G,Sq,Dv).
+    """
+    s = jnp.einsum("bhgqd,bhsd->bhgqs", qg, kb.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = _allowed(q_pos, kp_b, causal=causal, window=window,
+                    prefix_len=prefix_len)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    return m, p.sum(-1), jnp.einsum("bhgqs,bhsv->bhgqv", p,
+                                    vb.astype(jnp.float32))
+
+
+def merge_block_partials(ms, ls, accs):
+    """Merge per-block partials stacked on axis 0 in canonical block order.
+
+    The left-to-right scan fixes the floating-point summation order, so
+    every device of a ring — and the single-device oracle — produces the
+    same bits.  Returns acc / l, i.e. the attention output.
+    """
+    def body(carry, inp):
+        m, l, acc = carry
+        mj, lj, accj = inp
+        mn = jnp.maximum(m, mj)
+        a, bcoef = jnp.exp(m - mn), jnp.exp(mj - mn)
+        return (mn, l * a + lj * bcoef,
+                acc * a[..., None] + accj * bcoef[..., None]), None
+    (m, l, acc), _ = jax.lax.scan(body, (ms[0], ls[0], accs[0]),
+                                  (ms[1:], ls[1:], accs[1:]))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def _ring_bufs(part_shapes):
+    return tuple(jnp.zeros(s, jnp.float32) for s in part_shapes)
+
+
+def _ring_run(axis_name, n, rotate, local_partial, kv_operands, part_shapes):
+    """Shared ring driver: fill (ms, ls, accs) buffers indexed by global
+    block id, under either schedule, then merge canonically.
+
+    local_partial(ops) -> (m, l, acc) for the KV operand tuple ``ops``.
+    kv_operands is this device's resident block (the t=0 ring payload).
+    """
+    idx = jax.lax.axis_index(axis_name)
+    fwd = [(j, (j + 1) % n) for j in range(n)]
+
+    def put(bufs, j, part):
+        return tuple(jax.lax.dynamic_update_index_in_dim(b, p, j, 0)
+                     for b, p in zip(bufs, part))
+
+    def rot(tree):
+        return jax.tree.map(
+            lambda a: jax.lax.ppermute(a, axis_name, fwd), tree)
+
+    bufs = _ring_bufs(part_shapes)
+    if rotate == "kv":
+        cur = kv_operands
+        for t in range(n):
+            bufs = put(bufs, (idx - t) % n, local_partial(cur))
+            if t + 1 < n:
+                cur = rot(cur)
+    elif rotate == "stats":
+        cur = local_partial(kv_operands)
+        for t in range(n):
+            bufs = put(bufs, (idx - t) % n, cur)
+            if t + 1 < n:
+                cur = rot(cur)
+    else:
+        raise ValueError(f"unknown ring schedule {rotate!r}")
+    return merge_block_partials(*bufs)
+
+
+def ring_sdpa(q, k, v, q_pos, kv_pos, *, axis_name, n_blocks, rotate="kv",
+              causal=True, window=None, prefix_len=None, softcap=None):
+    """Grouped SDPA over a ring-sharded KV sequence (manual-region local).
+
+    Shapes are per-device: q (B,Sq_loc,H_loc,D), k/v (B,Skv_loc,KH_loc,D[v]),
+    q_pos (B,Sq_loc), kv_pos (B,Skv_loc).  ``axis_name`` is the mesh axis
+    (or axis tuple) the KV sequence is sharded over; ``n_blocks`` its total
+    size, passed statically by the wrapper.  Under rotate="stats" the
+    queries must be replicated across ``axis_name``; under rotate="kv" they
+    may instead be sharded over exactly that axis.  Both schedules return
+    bitwise-identical outputs (same partials, same canonical merge).
+    """
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = (q.reshape(b, sq, kh, g, d).transpose(0, 2, 3, 1, 4)
+          .astype(jnp.float32) / jnp.sqrt(jnp.float32(d)))
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    dv = vt.shape[-1]
+    n = n_blocks
+
+    def local_partial(ops):
+        kb, vb, kp = ops
+        return _block_partials(qg, kb, vb, q_pos, kp, causal=causal,
+                               window=window, prefix_len=prefix_len,
+                               softcap=softcap)
+
+    shp = (n, b, kh, g, sq)
+    out = _ring_run(axis_name, n, rotate, local_partial, (kt, vt, kv_pos),
+                    (shp, shp, shp + (dv,)))
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, -1)
+
+
+def ring_reference(q, k, v, q_pos, kv_pos, *, n_blocks, causal=True,
+                   window=None, prefix_len=None, softcap=None):
+    """Single-device oracle: split KV into ``n_blocks`` contiguous blocks,
+    compute the same per-block partials, merge in the same canonical
+    order.  ``ring_sdpa`` must match this bit-for-bit."""
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    if skv % n_blocks:
+        raise ValueError(f"Skv={skv} not divisible into {n_blocks} blocks "
+                         "(pad with repro.dist.seq.pad_kv first)")
+    c = skv // n_blocks
+    qg = (q.reshape(b, sq, kh, g, d).transpose(0, 2, 3, 1, 4)
+          .astype(jnp.float32) / jnp.sqrt(jnp.float32(d)))
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    parts = [_block_partials(qg, kt[:, :, j * c:(j + 1) * c],
+                             vt[:, :, j * c:(j + 1) * c], q_pos,
+                             kv_pos[:, j * c:(j + 1) * c], causal=causal,
+                             window=window, prefix_len=prefix_len,
+                             softcap=softcap)
+             for j in range(n_blocks)]
+    ms, ls, accs = (jnp.stack(x) for x in zip(*parts))
+    out = merge_block_partials(ms, ls, accs)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, -1)
+
+
+def _mla_block_partials(qa, qr, ckv_b, kr_b, q_pos, kp_b, *, window, scale):
+    """Absorbed-MLA partial for one latent block: scores in latent space,
+    accumulator over the latent (not per-head values).
+
+    qa: (B,Sq,H,R) f32; qr: (B,Sq,H,P) f32; ckv_b: (B,c,R); kr_b: (B,c,P).
+    Returns (m, l, acc): (B,H,Sq), (B,H,Sq), (B,H,Sq,R).
+    """
+    s = (jnp.einsum("bqhr,bsr->bhqs", qa, ckv_b.astype(jnp.float32))
+         + jnp.einsum("bqhp,bsp->bhqs", qr, kr_b.astype(jnp.float32))) * scale
+    mask = _allowed(q_pos, kp_b, causal=True, window=window, prefix_len=None)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    return m, p.sum(-1), jnp.einsum("bhqs,bsr->bhqr", p,
+                                    ckv_b.astype(jnp.float32))
+
+
+def ring_mla(qa, q_rope, ckv, krope, q_pos, kv_pos, *, axis_name, n_blocks,
+             rotate="stats", window=None, scale):
+    """Absorbed-MLA decode over a ring-sharded latent cache (manual-region
+    local).  Returns o_lat (B,Sq,H,R); the W_uv expansion stays outside
+    the ring, on the auto partitioner."""
+    b, sq, h, r = qa.shape
+    qa = qa.astype(jnp.float32)
+    qr = q_rope.astype(jnp.float32)
+    n = n_blocks
+
+    def local_partial(ops):
+        cb, kb, kp = ops
+        return _mla_block_partials(qa, qr, cb, kb, q_pos, kp,
+                                   window=window, scale=scale)
+
+    shp = (n, b, h, sq)
+    out = _ring_run(axis_name, n, rotate, local_partial, (ckv, krope, kv_pos),
+                    (shp, shp, shp + (r,)))
+    return out.transpose(0, 2, 1, 3)          # (B,H,Sq,R) -> (B,Sq,H,R)
+
+
+def ring_mla_reference(qa, q_rope, ckv, krope, q_pos, kv_pos, *, n_blocks,
+                       window=None, scale):
+    """Single-device oracle for ``ring_mla`` (same partials, same merge)."""
+    skv = ckv.shape[1]
+    if skv % n_blocks:
+        raise ValueError(f"Skv={skv} not divisible into {n_blocks} blocks")
+    c = skv // n_blocks
+    qa = qa.astype(jnp.float32)
+    qr = q_rope.astype(jnp.float32)
+    parts = [_mla_block_partials(qa, qr, ckv[:, j * c:(j + 1) * c],
+                                 krope[:, j * c:(j + 1) * c], q_pos,
+                                 kv_pos[:, j * c:(j + 1) * c],
+                                 window=window, scale=scale)
+             for j in range(n_blocks)]
+    ms, ls, accs = (jnp.stack(x) for x in zip(*parts))
+    return merge_block_partials(ms, ls, accs).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
 # KV cache
 # ---------------------------------------------------------------------------
 
@@ -277,10 +506,12 @@ def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
          chunk sees every previously appended chunk
        * cross attention: cross_kv supplies (k, v) precomputed; no cache.
     """
+    from repro.dist import seq as msq
     from repro.dist import tp as mtp
     b, sq, _ = x.shape
     h, kh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     mode = cfg.matmul_mode
+    ringc = msq.current_ring()
     # manual TP (inside a pipeline stage, train path only): wq/wo — and in
     # "shard" kv_mode wk/wv — hold this device's head slice; head counts
     # come from the local weight shapes so the same code runs sharded and
@@ -322,7 +553,7 @@ def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
     if cache is not None and cross_kv is None:
         if sq == 1:  # decode: write one slot, attend over the cache
             new_cache = _cache_write(cache, updates, q_pos[:, 0])
-            if quant and prefix_len is None:
+            if quant and prefix_len is None and ringc is None:
                 # fused path: codes stream into the kernel and dequantise
                 # in VMEM — the cache is never expanded to bf16/f32 in HBM
                 from repro.kernels import attention as kq
@@ -336,7 +567,8 @@ def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
                 out = o.reshape(b, 1, h_loc, -1)
                 k_all = v_all = kv_pos = None
             elif quant:
-                # prefix-LM decode: rare path, attend the dequantised cache
+                # prefix-LM or ring-sharded decode: attend the dequantised
+                # cache (the fused kernel is single-device)
                 from repro.kernels import attention as kq
                 k_all = kq.dequantize_kv(new_cache["k_codes"],
                                          new_cache["k_scale"])
@@ -395,10 +627,20 @@ def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
             kvh = (mtp.tp_index(tpc) * h_loc) // (h // kh)
             k_all = jax.lax.dynamic_slice_in_dim(k_all, kvh, 1, axis=2)
             v_all = jax.lax.dynamic_slice_in_dim(v_all, kvh, 1, axis=2)
-        out = sdpa(q, k_all, v_all, q_pos, kv_pos,
-                   causal=causal and cross_kv is None, window=window,
-                   prefix_len=prefix_len, chunk=cfg.attn_chunk,
-                   softcap=cfg.logit_softcap)
+        if ringc is not None and cross_kv is None and not tp_attn:
+            # sequence parallelism: ring-attend the seq-sharded KV inside
+            # a manual shard_map region; falls through to plain sdpa when
+            # the ambient rules leave this KV unsharded on the ring axis
+            out = msq.ring_attend(
+                q, k_all, v_all, q_pos, kv_pos,
+                kv_logical="kv_seq" if cache is not None else "seq",
+                causal=causal, window=window, prefix_len=prefix_len,
+                softcap=cfg.logit_softcap)
+        if out is None:
+            out = sdpa(q, k_all, v_all, q_pos, kv_pos,
+                       causal=causal and cross_kv is None, window=window,
+                       prefix_len=prefix_len, chunk=cfg.attn_chunk,
+                       softcap=cfg.logit_softcap)
     out = dense(out.reshape(b, sq, h_loc * d).astype(x.dtype), p["wo"], mode)
     if tp_attn:
         out = mtp.tp_psum(out, tpc)
@@ -483,19 +725,31 @@ def mla_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *,
     if cache is not None and sq == 1:
         # ---- absorbed decode ----
         new_cache = _cache_write(cache, {"ckv": ckv, "krope": krope}, q_pos[:, 0])
-        ckv_all = new_cache["ckv"].astype(jnp.float32)        # (B, S, R)
-        kr_all = new_cache["krope"].astype(jnp.float32)       # (B, S, P)
         kv_pos = new_cache["pos"]
         # absorb W_uk into q: qa (B,1,H,R)
         qa = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
                         p["wuk"].astype(jnp.float32))
-        s_nope = jnp.einsum("bqhr,bsr->bhqs", qa, ckv_all)
-        s_rope = jnp.einsum("bqhp,bsp->bhqs", q_rope.astype(jnp.float32), kr_all)
-        scores = (s_nope + s_rope) * scale
-        mask = _allowed(q_pos, kv_pos, causal=True, window=window, prefix_len=None)
-        scores = jnp.where(mask[:, None], scores, NEG_INF)
-        pr = jax.nn.softmax(scores, axis=-1)
-        o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, ckv_all)     # (B,1,H,R)
+        from repro.dist import seq as msq
+        o_lat = None
+        if msq.current_ring() is not None:
+            # sequence parallelism: ring over the seq-sharded latent cache;
+            # scores and the latent accumulator stay inside the manual
+            # region, the W_uv expansion below runs on the auto partitioner
+            o_lat = msq.ring_attend_mla(
+                qa, q_rope.astype(jnp.float32), new_cache["ckv"],
+                new_cache["krope"], q_pos, kv_pos, window=window, scale=scale)
+        if o_lat is None:
+            ckv_all = new_cache["ckv"].astype(jnp.float32)    # (B, S, R)
+            kr_all = new_cache["krope"].astype(jnp.float32)   # (B, S, P)
+            s_nope = jnp.einsum("bqhr,bsr->bhqs", qa, ckv_all)
+            s_rope = jnp.einsum("bqhp,bsp->bhqs", q_rope.astype(jnp.float32),
+                                kr_all)
+            scores = (s_nope + s_rope) * scale
+            mask = _allowed(q_pos, kv_pos, causal=True, window=window,
+                            prefix_len=None)
+            scores = jnp.where(mask[:, None], scores, NEG_INF)
+            pr = jax.nn.softmax(scores, axis=-1)
+            o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, ckv_all)  # (B,1,H,R)
         out = jnp.einsum("bqhr,rhv->bqhv", o_lat, p["wuv"].astype(jnp.float32))
     elif cache is not None and append:
         # ---- chunked prefill: append latents, expand K/V from the full

@@ -21,26 +21,104 @@ from repro.roofline import hw
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshAxis:
+    """One mesh axis: its name, size, and what the formulas use it for.
+
+    ``role`` drives every derived quantity, so a new axis is data, not a
+    hand-edit: "batch" axes multiply into ``dp``, "tensor" and "stage"
+    axes into ``weight_shards``, "sequence" axes ring the KV cache.
+    """
+    name: str
+    size: int
+    role: str      # "batch" | "tensor" | "stage" | "sequence"
+
+
+#: Canonical roles of the production axis names (``launch/mesh.py``).
+AXIS_ROLES = {"pod": "batch", "data": "batch", "model": "tensor",
+              "stage": "stage", "seq": "sequence"}
+
+
+@dataclasses.dataclass(frozen=True, init=False)
 class MeshSpec:
-    pod: int
-    data: int
-    model: int
-    stage: int = 1   # pipeline stages (1 = unpipelined)
+    """Declarative mesh description: an ordered tuple of :class:`MeshAxis`.
+
+    The historical keyword/positional constructor
+    ``MeshSpec(pod, data, model, stage=1, seq=1)`` is preserved — it
+    builds the canonical five-axis tuple (size-1 axes included, so
+    equality between old-style and explicit constructions holds) — and
+    ``from_axes`` admits arbitrary axis lists for future geometries.
+    Dry-run records and ``scripts/check_results.py`` only ever see the
+    derived scalars, so their schemas are unchanged.
+    """
+    axes: Tuple[MeshAxis, ...]
+
+    def __init__(self, pod: int = 1, data: int = 1, model: int = 1,
+                 stage: int = 1, seq: int = 1,
+                 axes: Optional[Tuple[MeshAxis, ...]] = None):
+        if axes is None:
+            axes = tuple(MeshAxis(n, s, AXIS_ROLES[n]) for n, s in
+                         (("pod", pod), ("stage", stage), ("seq", seq),
+                          ("data", data), ("model", model)))
+        else:
+            axes = tuple(axes)
+            names = [a.name for a in axes]
+            if len(set(names)) != len(names):
+                raise ValueError(f"duplicate mesh axis names: {names}")
+        object.__setattr__(self, "axes", axes)
+
+    @classmethod
+    def from_axes(cls, axes) -> "MeshSpec":
+        """Build from an iterable of MeshAxis or (name, size, role) triples."""
+        return cls(axes=tuple(a if isinstance(a, MeshAxis) else MeshAxis(*a)
+                              for a in axes))
+
+    def axis_size(self, name: str) -> int:
+        """Size of the named axis (1 if absent — absent = unsharded)."""
+        return next((a.size for a in self.axes if a.name == name), 1)
+
+    def role_size(self, *roles: str) -> int:
+        """Product of the sizes of every axis with one of ``roles``."""
+        out = 1
+        for a in self.axes:
+            if a.role in roles:
+                out *= a.size
+        return out
+
+    # -- named views the formulas (and dry-run stamps) read --------------
+    @property
+    def pod(self) -> int:
+        return self.axis_size("pod")
+
+    @property
+    def data(self) -> int:
+        return self.axis_size("data")
+
+    @property
+    def model(self) -> int:
+        return self.axis_size("model")
+
+    @property
+    def stage(self) -> int:
+        return self.axis_size("stage")
+
+    @property
+    def seq(self) -> int:
+        return self.axis_size("seq")
 
     @property
     def chips(self) -> int:
-        return self.pod * self.data * self.model * self.stage
+        return self.role_size("batch", "tensor", "stage", "sequence")
 
     @property
     def dp(self) -> int:  # total data-parallel ways
-        return self.pod * self.data
+        return self.role_size("batch")
 
     @property
     def weight_shards(self) -> int:
-        """TP-orthogonal weight sharding ways: the model axis, times the
-        stage axis when pipelined (each stage holds only its layer block —
+        """TP-orthogonal weight sharding ways: the tensor axes, times the
+        stage axes when pipelined (each stage holds only its layer block —
         the TP-in-stage layout the pipelined train step executes)."""
-        return self.model * self.stage
+        return self.role_size("tensor", "stage")
 
 
 SINGLE_POD = MeshSpec(pod=1, data=16, model=16)
@@ -651,6 +729,25 @@ def cell_collective_bytes(cfg: ModelConfig, shape: ShapeConfig,
         # sequence-sharded cache: softmax partials all-reduce (fp32, tiny) +
         # gathering the output latent: ~ b*d_model per layer
         out["seq_softmax"] = cfg.num_layers * b * cfg.d_model * 4 * 2 * (t - 1) / t
+    if shape.kind == "decode" and mesh.seq > 1:
+        # ring attention over the "seq" axis (stats schedule, the decode
+        # default in repro.dist.seq): the per-block online-softmax partial
+        # tuple — m, l scalars plus the fp32 accumulator row per head —
+        # travels seq-1 ppermute hops per attention layer.  Like pp_permute
+        # this is a collective-permute: result bytes == wire bytes per
+        # chip.  GQA accumulates per-head values (head_dim); absorbed MLA
+        # accumulates in the latent (kv_lora_rank).
+        n_ring = mesh.seq
+        per_head = (cfg.kv_lora_rank if cfg.attention_type == "mla"
+                    else cfg.head_dim) + 2
+        if cfg.family == "xlstm":
+            n_attn = 0
+        elif cfg.family == "hybrid":
+            n_attn = cfg.num_layers // cfg.attn_every
+        else:
+            n_attn = cfg.num_layers
+        out["ring_permute"] = ((n_ring - 1) * n_attn * b * cfg.num_heads *
+                               per_head * 4)
     return {**out, "total": sum(out.values())}
 
 
@@ -715,8 +812,11 @@ def memory_budget_per_device(cfg: ModelConfig, shape: ShapeConfig,
     else:
         dp = mesh.dp
         cache = kv_cache_bytes(cfg, shape.global_batch, shape.seq_len)
+        # the cache token dim additionally shards over any "sequence" axes
+        # (ring attention); with a small batch every axis ends up sharding
+        # the cache one way or another (folded layout)
         cache_shards = (mesh.chips if shape.global_batch < dp
-                        else dp * mesh.model)
+                        else dp * mesh.model * mesh.seq)
         out["kv_cache"] = cache / cache_shards
         tok_local = (shape.global_batch * shape.seq_len / dp
                      if shape.kind == "prefill" else shape.global_batch)

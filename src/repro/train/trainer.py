@@ -68,7 +68,7 @@ def train(model, cfg: ModelConfig, shape: ShapeConfig,
             def step_fn(state, batch):
                 # the rules context matters at trace time (first call);
                 # steady-state calls replay the cached jaxpr
-                with shd.use_rules(mesh, shd.pipeline_rules()):
+                with shd.use_rules(mesh, shd.get_rules("pipeline")):
                     return jitted(state, batch)
         else:
             step_fn = jitted

@@ -46,7 +46,14 @@ def test_production_sweep_results_complete():
     assert not errors, errors[:2]
     ok = {(r["arch"], r["shape"], r["mesh"]) for r in base
           if r["status"] == "ok"}
-    assert len(ok) >= 68  # 40 cells x 2 meshes - 12 documented skips
-    skips = [r for r in base if r.get("status") == "skipped"]
-    for s in skips:
-        assert s["shape"] == "long_500k"  # only the documented skip class
+    assert len(ok) == 80  # 40 cells x 2 meshes, nothing skipped anymore
+    # ring attention un-skipped the full-attention long_500k cells: the
+    # sweep must carry ZERO skip records (the 12 former skips re-lowered
+    # as seq-bearing cells, superseding their skip predecessors)
+    assert not [r for r in base if r.get("status") == "skipped"]
+    seq_cells = [r for r in base
+                 if r.get("seq_shards", 0) > 1 and r["status"] == "ok"]
+    assert len(seq_cells) == 12
+    for r in seq_cells:
+        assert r["shape"] == "long_500k"
+        assert "ring_permute" in r["roofline"]["coll_breakdown"], r["arch"]

@@ -35,7 +35,7 @@ step_fn = make_train_step(model, opt, TrainPlan(accum_steps=2, micro_batch=4))
 
 def run(mesh_shape, axes):
     mesh = jax.make_mesh(mesh_shape, axes)
-    rules = shd.train_rules()
+    rules = shd.get_rules("train")
     state = init_state(model, jax.random.key(0), opt)
     schema = model.schema()
     paxes = axes_tree(schema)

@@ -65,3 +65,22 @@ def test_gate_catches_missing_canonical_pipelined_cell():
     recs = [r for r in _load() if not r.get("pipeline_stages")]
     errs = check(recs)
     assert any("missing canonical pipelined cell" in e for e in errs), errs
+
+
+def test_gate_catches_resurrected_long_500k_skip():
+    recs = _load()
+    bad = recs + [{"arch": "qwen2_72b", "shape": "long_500k",
+                   "mesh": "single", "status": "skipped",
+                   "rules": "default", "mesh_shape": "", "reason": "x"}]
+    errs = check(bad)
+    assert any("long_500k is skipped" in e for e in errs), errs
+
+
+def test_gate_catches_seq_cell_without_ring_term():
+    recs = _load()
+    bad = copy.deepcopy(recs)
+    seq = next(r for r in bad if r.get("seq_shards", 0) > 1
+               and r.get("status") == "ok")
+    del seq["roofline"]["coll_breakdown"]["ring_permute"]
+    errs = check(bad)
+    assert any("ring_permute" in e for e in errs), errs

@@ -14,7 +14,7 @@ def mesh():
 
 
 def test_basic_spec(mesh):
-    rules = shd.train_rules()
+    rules = shd.get_rules("train")
     spec = shd.partition_spec(mesh, rules, (8, 16), ("batch", "ffn"))
     # 'pod' absent on this mesh -> filtered; sizes 1 divide everything
     assert spec == P("data", "model") or spec == P(None, "model") or \
@@ -50,7 +50,7 @@ def test_shard_noop_without_context():
 
 
 def test_tree_shardings(mesh):
-    rules = shd.train_rules()
+    rules = shd.get_rules("train")
     ab = {"w": jax.ShapeDtypeStruct((16, 32), jax.numpy.float32)}
     ax = {"w": ("d_model", "ffn")}
     sh = shd.tree_shardings(mesh, rules, ab, ax)
