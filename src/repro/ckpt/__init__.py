@@ -1,0 +1,20 @@
+"""repro.ckpt — atomic, compressed, reshardable checkpoints.
+
+  checkpoint.py  the on-disk format: atomic rename barrier, per-leaf
+                 crc32, treedef validation, per-leaf codecs, retention
+  codec.py       int8 error-feedback leaf codec (payload + scale +
+                 residual, bitwise-exact restore) on the
+                 ``repro.optim.compress`` formulas
+  manager.py     ``CheckpointManager`` — bounded async writer queue,
+                 compute-overlap accounting, compressed optimizer state,
+                 elastic (re-sharding) restore, obs instrumentation
+
+See docs/fault_tolerance.md for the layout and lifecycle walkthrough.
+"""
+from repro.ckpt import checkpoint, codec  # noqa: F401
+from repro.ckpt.checkpoint import (CheckpointCorruption,  # noqa: F401
+                                   TreedefMismatch, all_steps, clean_torn,
+                                   latest_step, read_manifest, restore, save)
+from repro.ckpt.manager import (CheckpointManager,  # noqa: F401
+                                CheckpointWriteError, SaveRecord,
+                                default_compress_filter)

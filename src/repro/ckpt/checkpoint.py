@@ -4,39 +4,69 @@ Layout (one directory per step):
 
   <dir>/step_000123.tmp/...   -> written fully, fsync'd, then renamed to
   <dir>/step_000123/
-      manifest.json           tree structure, shapes, dtypes, crc32 per leaf
-      00000.npy .. NNNNN.npy  one file per leaf
+      manifest.json           tree structure, shapes, dtypes, crc32 per
+                              leaf, per-leaf codec + scale for compressed
+                              leaves
+      00000.npy .. NNNNN.npy  one file per raw leaf
+      NNNNN.q.npy + NNNNN.r.z int8 payload + deflated residual for leaves
+                              stored through the int8_ef codec
 
 Properties:
-  * atomic: readers only ever see complete checkpoints (rename barrier);
-  * integrity-checked: per-leaf crc32 verified on restore;
+  * atomic: readers only ever see complete checkpoints (rename barrier,
+    parent-directory fsync); a torn ``.tmp`` directory left by a crash is
+    invisible to ``all_steps`` and cleaned by ``clean_torn``;
+  * integrity-checked: per-leaf crc32 of the *logical* bytes verified on
+    restore (codec leaves additionally crc their payload and residual
+    files, so corruption is localized);
+  * structure-checked: the saved treedef — not just the leaf count — must
+    match the restore target (``TreedefMismatch``);
   * reshardable (elastic scaling): restore takes an optional pytree of
-    NamedShardings for a *different* mesh than the save used — leaves are
-    loaded on host and device_put with the new sharding, so a job can come
-    back on fewer/more chips (tests/test_checkpoint.py);
-  * async: ``save(..., blocking=False)`` snapshots to host then writes on a
-    background thread, overlapping I/O with the next training step;
+    shardings (``None`` leaves replicate) for a *different* mesh than the
+    save used — leaves are loaded on host and ``device_put`` with the new
+    sharding, so a job can come back on fewer/more chips or a different
+    (stage, seq, data, model) carving (tests/test_checkpoint.py,
+    tests/test_multidevice.py);
+  * compressed: per-leaf codecs (``repro.ckpt.codec``) store optimizer
+    moments as int8 payload + scale + residual, bitwise-exact on restore;
+  * async: ``save(..., blocking=False)`` snapshots to host then writes on
+    a background thread; the production path is ``repro.ckpt.manager``,
+    which bounds the writer queue and accounts the compute overlap;
   * retention: keep the newest ``keep`` checkpoints, delete older ones.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import re
 import shutil
 import threading
+import time
 import zlib
-from typing import Any, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
+from repro.ckpt import codec as _codec
+
 _STEP_RE = re.compile(r"^step_(\d{9})$")
+_TMP_RE = re.compile(r"^step_(\d{9})\.tmp$")
 
 #: dtypes npy can roundtrip natively; anything else (bfloat16, fp8) is
 #: stored as a raw uint view with the logical dtype kept in the manifest.
 _NATIVE = {"float16", "float32", "float64", "int8", "int16", "int32",
            "int64", "uint8", "uint16", "uint32", "uint64", "bool"}
+
+MANIFEST_VERSION = 2
+
+
+class CheckpointCorruption(IOError):
+    """A leaf failed its crc32 integrity check on restore."""
+
+
+class TreedefMismatch(ValueError):
+    """The restore target's tree structure differs from the saved one."""
 
 
 def _storable(arr: np.ndarray):
@@ -56,31 +86,98 @@ def _unstorable(arr: np.ndarray, logical: str) -> np.ndarray:
     return arr.view(jnp.dtype(logical))
 
 
-def _leaf_paths(tree):
+def _logical_crc(arr: np.ndarray) -> int:
+    store, _ = _storable(arr)
+    return zlib.crc32(np.ascontiguousarray(store).tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Snapshot (device -> host) and write (host -> disk), as separate steps so
+# the manager can overlap the write with subsequent train steps.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Snapshot:
+    """A host-side copy of a pytree, decoupled from device state."""
+    host_leaves: List[np.ndarray]
+    treedef_str: str
+    nbytes: int
+
+
+def snapshot(tree) -> Snapshot:
+    """Copy ``tree`` to host memory (blocks on device transfers only)."""
     flat, treedef = jax.tree.flatten(tree)
-    return flat, treedef
+    host = [np.asarray(x) for x in flat]
+    return Snapshot(host_leaves=host, treedef_str=str(treedef),
+                    nbytes=sum(x.nbytes for x in host))
 
 
-def save(directory: str, step: int, tree, *, keep: int = 3,
-         blocking: bool = True) -> threading.Thread | None:
-    """Write a checkpoint for ``step``.  Returns the writer thread if async."""
-    flat, treedef = _leaf_paths(tree)
-    host_leaves = [np.asarray(x) for x in flat]  # snapshot (device -> host)
-    treedef_str = str(treedef)
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir-open
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
-    def _write():
-        name = f"step_{step:09d}"
-        tmp = os.path.join(directory, name + ".tmp")
-        final = os.path.join(directory, name)
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp, exist_ok=True)
-        manifest = {"step": step, "treedef": treedef_str, "leaves": []}
-        for i, leaf in enumerate(host_leaves):
+
+def write_snapshot(directory: str, step: int, snap: Snapshot, *,
+                   keep: int = 3,
+                   codecs: Optional[Sequence[Optional[str]]] = None,
+                   throttle_s: float = 0.0) -> Dict[str, Any]:
+    """Write ``snap`` as the checkpoint for ``step``; returns write stats.
+
+    ``codecs``: per-leaf codec names aligned with ``snap.host_leaves``
+    (``None`` = raw npy, ``"int8_ef"`` = the exact compressed codec; a
+    leaf the codec cannot take losslessly falls back to raw).
+    ``throttle_s`` artificially stretches the write (a chaos/test knob:
+    it widens the window in which a crash tears the ``.tmp`` directory
+    and in which the async writer overlaps train steps).
+    """
+    codecs = list(codecs) if codecs is not None else [None] * len(snap.host_leaves)
+    assert len(codecs) == len(snap.host_leaves), (len(codecs),
+                                                  len(snap.host_leaves))
+    name = f"step_{step:09d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest: Dict[str, Any] = {"step": step, "version": MANIFEST_VERSION,
+                                "treedef": snap.treedef_str, "leaves": []}
+    raw_bytes = stored_bytes = 0
+    for i, (leaf, codec) in enumerate(zip(snap.host_leaves, codecs)):
+        raw_bytes += leaf.nbytes
+        if codec == "int8_ef" and _codec.encodable(leaf):
+            enc = _codec.encode_int8_ef(leaf)
+            qname, rname = f"{i:05d}.q.npy", f"{i:05d}.r.z"
+            with open(os.path.join(tmp, qname), "wb") as f:
+                np.save(f, enc.payload)
+                f.flush()
+                os.fsync(f.fileno())
+            with open(os.path.join(tmp, rname), "wb") as f:
+                f.write(enc.residual_z)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["leaves"].append({
+                "file": qname, "residual": rname, "codec": "int8_ef",
+                "scale": enc.scale, "shape": list(leaf.shape),
+                "dtype": enc.dtype, "crc32": _logical_crc(leaf),
+                "payload_crc32": zlib.crc32(
+                    np.ascontiguousarray(enc.payload).tobytes()),
+                "residual_crc32": zlib.crc32(enc.residual_z),
+                "raw_bytes": enc.raw_bytes,
+                "stored_bytes": enc.stored_bytes,
+            })
+            stored_bytes += enc.stored_bytes
+        else:
+            if codec not in (None, "int8_ef"):
+                raise ValueError(f"unknown codec {codec!r} for leaf {i}")
             fname = f"{i:05d}.npy"
-            path = os.path.join(tmp, fname)
             store, logical = _storable(leaf)
-            with open(path, "wb") as f:
+            with open(os.path.join(tmp, fname), "wb") as f:
                 np.save(f, store)
                 f.flush()
                 os.fsync(f.fileno())
@@ -89,14 +186,39 @@ def save(directory: str, step: int, tree, *, keep: int = 3,
                 "dtype": logical,
                 "crc32": zlib.crc32(np.ascontiguousarray(store).tobytes()),
             })
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        _retain(directory, keep)
+            stored_bytes += leaf.nbytes
+        if throttle_s:
+            time.sleep(throttle_s / max(1, len(snap.host_leaves)))
+    manifest["raw_bytes"] = raw_bytes
+    manifest["stored_bytes"] = stored_bytes
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _fsync_dir(directory)  # make the rename itself durable
+    removed = _retain(directory, keep)
+    return {"step": step, "raw_bytes": raw_bytes,
+            "stored_bytes": stored_bytes, "path": final,
+            "retained_removed": removed}
+
+
+def save(directory: str, step: int, tree, *, keep: int = 3,
+         blocking: bool = True,
+         codecs: Optional[Sequence[Optional[str]]] = None
+         ) -> threading.Thread | None:
+    """Write a checkpoint for ``step``.  Returns the writer thread if async.
+
+    This is the low-level one-shot API; long-running trainers should use
+    ``repro.ckpt.manager.CheckpointManager``, which bounds concurrent
+    writers and joins them before blocking saves and retention passes.
+    """
+    snap = snapshot(tree)
+
+    def _write():
+        write_snapshot(directory, step, snap, keep=keep, codecs=codecs)
 
     if blocking:
         _write()
@@ -106,11 +228,30 @@ def save(directory: str, step: int, tree, *, keep: int = 3,
     return t
 
 
-def _retain(directory: str, keep: int):
+def _retain(directory: str, keep: int) -> List[int]:
     steps = sorted(all_steps(directory))
-    for s in steps[:-keep]:
+    removed = steps[:-keep] if keep > 0 else []
+    for s in removed:
         shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
                       ignore_errors=True)
+    return removed
+
+
+def clean_torn(directory: str) -> List[str]:
+    """Remove leftover ``step_*.tmp`` directories (a crash mid-write).
+
+    Safe at any time: a ``.tmp`` directory is by construction not visible
+    to ``all_steps``/``restore``, so deleting it never loses a completed
+    checkpoint.  Returns the removed directory names.
+    """
+    if not os.path.isdir(directory):
+        return []
+    removed = []
+    for name in sorted(os.listdir(directory)):
+        if _TMP_RE.match(name):
+            shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+            removed.append(name)
+    return removed
 
 
 def all_steps(directory: str):
@@ -129,32 +270,82 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(directory: str, step: int, like, *, shardings=None):
+def _load_leaf(path: str, meta: Dict[str, Any], index: int) -> np.ndarray:
+    """Load + integrity-check one leaf (raw or codec)."""
+    if meta.get("codec") == "int8_ef":
+        payload = np.load(os.path.join(path, meta["file"]))
+        crc = zlib.crc32(np.ascontiguousarray(payload).tobytes())
+        if crc != meta["payload_crc32"]:
+            raise CheckpointCorruption(
+                f"corrupt payload in leaf {index} ({meta['file']}): "
+                f"crc {crc} != {meta['payload_crc32']}")
+        with open(os.path.join(path, meta["residual"]), "rb") as f:
+            residual_z = f.read()
+        crc = zlib.crc32(residual_z)
+        if crc != meta["residual_crc32"]:
+            raise CheckpointCorruption(
+                f"corrupt residual in leaf {index} ({meta['residual']}): "
+                f"crc {crc} != {meta['residual_crc32']}")
+        arr = _codec.decode_int8_ef(payload, residual_z, meta["scale"],
+                                    meta["dtype"], tuple(meta["shape"]))
+        crc = _logical_crc(arr)
+        if crc != meta["crc32"]:
+            raise CheckpointCorruption(
+                f"codec reconstruction mismatch in leaf {index}: "
+                f"crc {crc} != {meta['crc32']}")
+        return arr
+    arr = np.load(os.path.join(path, meta["file"]))
+    crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+    if crc != meta["crc32"]:
+        raise CheckpointCorruption(
+            f"checkpoint corruption in leaf {index} "
+            f"({meta['file']}): crc {crc} != {meta['crc32']}")
+    return _unstorable(arr, meta["dtype"])
+
+
+def restore(directory: str, step: int, like, *, shardings=None,
+            strict_treedef: bool = True):
     """Load the checkpoint for ``step`` into the structure of ``like``.
 
-    ``shardings``: optional pytree of jax.sharding.Sharding matching ``like``
-    — enables elastic restore onto a different mesh.
+    ``shardings``: optional pytree of jax.sharding.Sharding matching
+    ``like`` (``None`` leaves fall back to a plain ``device_put``) —
+    enables elastic restore onto a different mesh than the save used.
+    ``strict_treedef``: validate the *saved* tree structure against
+    ``like`` (raises ``TreedefMismatch``), not just the leaf count.
     """
     name = f"step_{step:09d}"
     path = os.path.join(directory, name)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     flat_like, treedef = jax.tree.flatten(like)
-    assert len(flat_like) == len(manifest["leaves"]), (
-        len(flat_like), len(manifest["leaves"]))
-    flat_sh = (jax.tree.flatten(shardings)[0] if shardings is not None
-               else [None] * len(flat_like))
+    if strict_treedef and "treedef" in manifest:
+        if manifest["treedef"] != str(treedef):
+            raise TreedefMismatch(
+                f"checkpoint tree structure differs from restore target:\n"
+                f"  saved:  {manifest['treedef']}\n"
+                f"  target: {treedef}")
+    if len(flat_like) != len(manifest["leaves"]):
+        raise TreedefMismatch(
+            f"leaf count mismatch: saved {len(manifest['leaves'])}, "
+            f"target {len(flat_like)}")
+    if shardings is None:
+        flat_sh = [None] * len(flat_like)
+    else:
+        flat_sh = jax.tree.flatten(
+            shardings, is_leaf=lambda x: x is None)[0]
+        assert len(flat_sh) == len(flat_like), (len(flat_sh), len(flat_like))
     out = []
-    for i, (meta, ref, sh) in enumerate(zip(manifest["leaves"], flat_like,
-                                            flat_sh)):
-        arr = np.load(os.path.join(path, meta["file"]))
-        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
-        if crc != meta["crc32"]:
-            raise IOError(f"checkpoint corruption in leaf {i} "
-                          f"({meta['file']}): crc {crc} != {meta['crc32']}")
-        arr = _unstorable(arr, meta["dtype"])
+    for i, (meta, sh) in enumerate(zip(manifest["leaves"], flat_sh)):
+        arr = _load_leaf(path, meta, i)
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         else:
             out.append(jax.device_put(arr))
     return jax.tree.unflatten(treedef, out)
+
+
+def read_manifest(directory: str, step: int) -> Dict[str, Any]:
+    """The manifest for ``step`` (layout inspection, tests, tooling)."""
+    path = os.path.join(directory, f"step_{step:09d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)

@@ -22,6 +22,18 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep", type=int, default=3,
+                    help="checkpoint retention (newest N kept)")
+    ap.add_argument("--no-async-ckpt", action="store_true",
+                    help="block the step loop on every checkpoint write")
+    ap.add_argument("--no-compress-opt", action="store_true",
+                    help="store optimizer moments raw instead of int8_ef")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="model-parallel mesh axis size (elastic resume "
+                         "re-shards a checkpoint from any other carving)")
+    ap.add_argument("--restart-on", default="injected",
+                    choices=["injected", "any"],
+                    help="which faults the supervisor auto-restarts on")
     ap.add_argument("--matmul-mode", default="bf16",
                     choices=["bf16", "bp8", "bp8_lowrank", "fp8"])
     ap.add_argument("--full-config", action="store_true",
@@ -46,13 +58,20 @@ def main():
     opt = OptimizerConfig(learning_rate=args.lr, warmup_steps=5,
                           total_steps=args.steps)
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
-                         ckpt_dir=args.ckpt_dir, metrics_path=args.metrics)
+                         ckpt_dir=args.ckpt_dir, keep=args.keep,
+                         metrics_path=args.metrics,
+                         ckpt_async=not args.no_async_ckpt,
+                         ckpt_compress_opt=not args.no_compress_opt)
     injector = (FailureInjector(fail_at_steps=(args.fail_at,))
                 if args.fail_at else None)
+    mesh = None
+    if args.model_shards > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.model_shards)
 
     def run():
         _, hist = train(model, cfg, shape, tcfg, opt_cfg=opt,
-                        injector=injector,
+                        injector=injector, mesh=mesh,
                         on_metrics=lambda s, m: (
                             print(f"step {s:5d} loss {float(m['loss']):.4f} "
                                   f"lr {float(m['lr']):.2e} "
@@ -60,8 +79,11 @@ def main():
                             if s % 10 == 0 else None))
         return hist[-1]["step"] if hist else 0
 
-    if injector:
-        out = Supervisor(max_restarts=3).run(run)
+    if injector or args.restart_on == "any":
+        sup = Supervisor(max_restarts=3)
+        if args.restart_on == "any":
+            sup.should_restart = lambda e: True
+        out = sup.run(run)
         print(f"finished at step {out['final_step']} after "
               f"{out['restarts']} restart(s)")
     else:

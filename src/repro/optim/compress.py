@@ -9,6 +9,14 @@ run, convergence-safe.
 
 ``compress``/``decompress`` are pure-jax and usable inside pjit; the
 residual state rides in the optimizer state pytree.
+
+``compress_leaf_host``/``decompress_leaf_host`` are the numpy mirrors of
+the same formulas, used by the checkpoint codec (``repro.ckpt.codec``) to
+serialize optimizer moments as int8 payload + per-leaf scale + residual on
+the background writer thread without dispatching jax ops.  The two paths
+are pinned bitwise-identical in ``tests/test_checkpoint.py``, so the wire
+format a cross-pod reduction would ship and the on-disk checkpoint payload
+are the same codec.
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def init_residual(params):
@@ -38,6 +47,30 @@ def compress(grads, residual) -> Tuple[Any, Any, Any]:
     s = treedef.unflatten([l[1] for l in leaves])
     r = treedef.unflatten([l[2] for l in leaves])
     return q, s, r
+
+
+def compress_leaf_host(arr) -> Tuple[np.ndarray, np.float32, np.ndarray]:
+    """Numpy mirror of ``compress`` for ONE leaf: -> (q, scale, residual).
+
+    Same op order as the jax path (max -> maximum -> divide, round-half-
+    to-even, clip) so the outputs are bitwise identical to ``compress`` on
+    the same values.  The residual is exact in fp32: for q != 0 the
+    quantization bounds put ``g`` and ``q*scale`` within a factor of two
+    of each other, so the subtraction is exact by Sterbenz's lemma, and
+    ``q*scale + residual`` reconstructs ``g`` bitwise (verified at encode
+    time by ``repro.ckpt.codec``).
+    """
+    g = np.asarray(arr, np.float32)
+    scale = np.float32(
+        np.maximum(np.max(np.abs(g)), np.float32(1e-12)) / np.float32(127.0))
+    q = np.clip(np.round(g / scale), -127, 127).astype(np.int8)
+    residual = g - q.astype(np.float32) * scale
+    return q, scale, residual
+
+
+def decompress_leaf_host(q: np.ndarray, scale) -> np.ndarray:
+    """Numpy mirror of ``decompress`` for one leaf (fp32 output)."""
+    return q.astype(np.float32) * np.float32(scale)
 
 
 def decompress(q, scales):

@@ -1,0 +1,344 @@
+"""Checkpoint layer: atomicity, integrity, codecs, retention, manager.
+
+The checkpoint directory is the only thing a crashed job leaves behind, so
+this suite attacks it the way a crash would: torn ``.tmp`` directories,
+flipped bytes in every kind of leaf file, structure drift between save and
+restore, async/blocking interleavings.  The int8_ef codec is additionally
+pinned bitwise against the jax gradient-compression path it mirrors.
+"""
+import json
+import os
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.ckpt import checkpoint as ckpt
+from repro.ckpt import codec as codec_mod
+from repro.ckpt.checkpoint import CheckpointCorruption, TreedefMismatch
+from repro.ckpt.manager import (CheckpointManager, CheckpointWriteError,
+                                default_compress_filter)
+from repro.optim.compress import (compress, compress_leaf_host,
+                                  decompress_leaf_host, init_residual)
+
+TREE = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.linspace(-1, 1, 5, dtype=np.float32),
+        "n": np.int32(7)}
+
+
+def _like(tree):
+    return jax.tree.map(np.zeros_like, tree)
+
+
+# ---------------------------------------------------------------------------
+# atomicity / torn tmp
+# ---------------------------------------------------------------------------
+
+def test_torn_tmp_invisible_and_cleaned(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, TREE)
+    # simulate a crash mid-write: a partial .tmp directory with some leaf
+    # files but no completed rename
+    torn = tmp_path / "step_000000002.tmp"
+    torn.mkdir()
+    (torn / "00000.npy").write_bytes(b"partial garbage")
+    assert ckpt.all_steps(d) == [1]          # torn dir is invisible
+    assert ckpt.latest_step(d) == 1
+    removed = ckpt.clean_torn(d)
+    assert removed == ["step_000000002.tmp"]
+    assert not torn.exists()
+    back = ckpt.restore(d, 1, _like(TREE))   # completed ckpt unaffected
+    np.testing.assert_array_equal(np.asarray(back["w"]), TREE["w"])
+
+
+def test_manager_cleans_torn_tmp_at_init(tmp_path):
+    torn = tmp_path / "step_000000005.tmp"
+    torn.mkdir()
+    CheckpointManager(str(tmp_path))
+    assert not torn.exists()
+
+
+def test_completed_dir_requires_manifest(tmp_path):
+    # a step directory without a manifest (rename raced a crash on a
+    # filesystem without atomic rename) must not be listed
+    (tmp_path / "step_000000003").mkdir()
+    assert ckpt.all_steps(str(tmp_path)) == []
+
+
+# ---------------------------------------------------------------------------
+# integrity: per-leaf crc
+# ---------------------------------------------------------------------------
+
+def _flip_byte(path, offset=-1):
+    data = bytearray(path.read_bytes())
+    data[offset] ^= 0xFF
+    path.write_bytes(bytes(data))
+
+
+def test_raw_leaf_corruption_detected(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, TREE)
+    _flip_byte(tmp_path / "step_000000001" / "00000.npy")
+    with pytest.raises(CheckpointCorruption):
+        ckpt.restore(d, 1, _like(TREE))
+
+
+def _codec_ckpt(tmp_path, tree=None):
+    tree = tree if tree is not None else {"m": TREE["w"]}
+    d = str(tmp_path)
+    ckpt.save(d, 1, tree, codecs=["int8_ef"] * len(jax.tree.leaves(tree)))
+    return d, tree
+
+
+def test_codec_payload_corruption_detected(tmp_path):
+    d, tree = _codec_ckpt(tmp_path)
+    _flip_byte(tmp_path / "step_000000001" / "00000.q.npy")
+    with pytest.raises(CheckpointCorruption, match="payload"):
+        ckpt.restore(d, 1, _like(tree))
+
+
+def test_codec_residual_corruption_detected(tmp_path):
+    d, tree = _codec_ckpt(tmp_path)
+    _flip_byte(tmp_path / "step_000000001" / "00000.r.z")
+    with pytest.raises(CheckpointCorruption, match="residual"):
+        ckpt.restore(d, 1, _like(tree))
+
+
+# ---------------------------------------------------------------------------
+# dtype round trips (the _storable uint-view path + the codec)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16",
+                                   "float8_e4m3fn", "float32"])
+def test_nonnative_dtype_roundtrip(tmp_path, dtype):
+    dt = jnp.dtype(dtype)
+    rng = np.random.default_rng(0)
+    arr = rng.standard_normal((4, 8), dtype=np.float32).astype(dt)
+    tree = {"x": arr}
+    ckpt.save(str(tmp_path), 1, tree)
+    back = ckpt.restore(str(tmp_path), 1, {"x": np.zeros((4, 8), dt)})
+    got = np.asarray(back["x"])
+    assert got.dtype == dt
+    assert got.tobytes() == arr.tobytes()    # bitwise
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16",
+                                   "float8_e4m3fn", "float32"])
+def test_codec_roundtrip_bitwise(dtype):
+    dt = jnp.dtype(dtype)
+    rng = np.random.default_rng(1)
+    arr = rng.standard_normal((64,), dtype=np.float32).astype(dt)
+    enc = codec_mod.encode_int8_ef(arr)
+    dec = codec_mod.decode_int8_ef(enc.payload, enc.residual_z, enc.scale,
+                                   enc.dtype, arr.shape)
+    assert np.asarray(dec).tobytes() == arr.tobytes()
+    assert enc.payload_bytes == arr.size     # 1 byte/element wire format
+
+
+def test_codec_negative_zero_preserved():
+    arr = np.array([0.0, -0.0, 1.0, -1.0], np.float32)
+    enc = codec_mod.encode_int8_ef(arr)
+    dec = codec_mod.decode_int8_ef(enc.payload, enc.residual_z, enc.scale,
+                                   enc.dtype, arr.shape)
+    assert np.asarray(dec).tobytes() == arr.tobytes()
+
+
+def test_codec_rejects_nonfinite():
+    assert not codec_mod.encodable(np.array([1.0, np.inf], np.float32))
+    assert not codec_mod.encodable(np.array([1, 2], np.int32))
+    # write_snapshot falls back to raw for such leaves instead of failing
+    assert ckpt is not None
+
+
+def test_nonfinite_leaf_falls_back_to_raw(tmp_path):
+    tree = {"x": np.array([1.0, np.nan], np.float32)}
+    ckpt.save(str(tmp_path), 1, tree, codecs=["int8_ef"])
+    man = ckpt.read_manifest(str(tmp_path), 1)
+    assert "codec" not in man["leaves"][0]
+    back = ckpt.restore(str(tmp_path), 1, _like(tree))
+    assert np.asarray(back["x"]).tobytes() == tree["x"].tobytes()
+
+
+# ---------------------------------------------------------------------------
+# numpy codec == jax gradient-compression path, bitwise
+# ---------------------------------------------------------------------------
+
+def test_host_codec_matches_jax_compress_bitwise():
+    rng = np.random.default_rng(2)
+    g = rng.standard_normal((32, 16), dtype=np.float32)
+    tree = {"g": jnp.asarray(g)}
+    q_j, s_j, r_j = compress(tree, init_residual(tree))
+    q_n, s_n, r_n = compress_leaf_host(g)
+    assert np.asarray(q_j["g"]).tobytes() == q_n.tobytes()
+    assert np.float32(s_j["g"]) == s_n
+    assert np.asarray(r_j["g"]).tobytes() == r_n.tobytes()
+    np.testing.assert_array_equal(
+        decompress_leaf_host(q_n, s_n),
+        np.asarray(q_j["g"], np.float32) * np.float32(s_j["g"]))
+
+
+# ---------------------------------------------------------------------------
+# retention
+# ---------------------------------------------------------------------------
+
+def test_retention_keeps_exactly_newest(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 6):
+        ckpt.save(d, s, TREE, keep=2)
+    assert ckpt.all_steps(d) == [4, 5]
+    # keep=0 disables deletion
+    for s in range(6, 8):
+        ckpt.save(d, s, TREE, keep=0)
+    assert ckpt.all_steps(d) == [4, 5, 6, 7]
+
+
+# ---------------------------------------------------------------------------
+# async == blocking, byte-identical on disk
+# ---------------------------------------------------------------------------
+
+def _dir_bytes(root):
+    out = {}
+    for base, _, files in os.walk(root):
+        for f in files:
+            p = os.path.join(base, f)
+            out[os.path.relpath(p, root)] = open(p, "rb").read()
+    return out
+
+
+def test_async_and_blocking_saves_byte_identical(tmp_path):
+    state = {"opt": {"m": TREE["w"], "v": TREE["b"], "step": np.int32(3)},
+             "params": {"w": TREE["w"]}}
+    a, b = tmp_path / "a", tmp_path / "b"
+    ma = CheckpointManager(str(a))
+    mb = CheckpointManager(str(b))
+    ma.save(1, state, blocking=True)
+    mb.save(1, state, blocking=False)
+    mb.wait_until_finished()
+    assert _dir_bytes(a) == _dir_bytes(b)
+    ma.close(), mb.close()
+
+
+# ---------------------------------------------------------------------------
+# structure validation
+# ---------------------------------------------------------------------------
+
+def test_treedef_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, TREE)
+    renamed = {"w2": TREE["w"], "b": TREE["b"], "n": TREE["n"]}
+    with pytest.raises(TreedefMismatch):
+        ckpt.restore(d, 1, renamed)          # same leaf count, new key
+    with pytest.raises(TreedefMismatch):
+        ckpt.restore(d, 1, {"w": TREE["w"]})  # leaf count mismatch
+    # non-strict restore still loads by position (legacy escape hatch)
+    back = ckpt.restore(d, 1, renamed, strict_treedef=False)
+    assert set(back) == {"w2", "b", "n"}
+
+
+# ---------------------------------------------------------------------------
+# manager: compression targeting, error surfacing, restore
+# ---------------------------------------------------------------------------
+
+def test_manager_compresses_only_opt_moments(tmp_path):
+    state = {"params": {"w": TREE["w"]},
+             "opt": {"m": TREE["w"], "v": TREE["w"],
+                     "step": np.int32(1)}}
+    m = CheckpointManager(str(tmp_path))
+    rec = m.save(1, state, blocking=True)
+    man = ckpt.read_manifest(str(tmp_path), 1)
+    codecs = [leaf.get("codec") for leaf in man["leaves"]]
+    # flatten order is sorted keys: opt.m, opt.v, opt.step, params.w
+    assert codecs.count("int8_ef") == 2
+    # compressed leaves ship 1-byte payloads; manifest accounts honestly
+    for leaf in man["leaves"]:
+        if leaf.get("codec") == "int8_ef":
+            assert leaf["raw_bytes"] == 4 * np.prod(leaf["shape"])
+    assert rec.raw_bytes == sum(l.nbytes for l in jax.tree.leaves(state))
+    back, step = m.restore(jax.tree.map(np.zeros_like, state))
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(state)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    m.close()
+
+
+def test_default_compress_filter_paths():
+    state = {"params": {"w": 0}, "opt": {"m": {"w": 0}, "v": {"w": 0},
+                                         "step": 0}}
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    picked = [default_compress_filter(p, l) for p, l in flat]
+    keyed = {tuple(getattr(k, "key", None) for k in p): v
+             for (p, _), v in zip(flat, picked)}
+    assert keyed[("opt", "m", "w")] and keyed[("opt", "v", "w")]
+    assert not keyed[("opt", "step")]
+    assert not keyed[("params", "w")]
+
+
+def test_manager_surfaces_writer_errors(tmp_path):
+    m = CheckpointManager(str(tmp_path / "ok"))
+    m.save(1, TREE, blocking=False)
+    m.wait_until_finished()
+    # now break the directory out from under the writer
+    m.directory = "/proc/definitely/not/writable"
+    m.save(2, TREE, blocking=False)
+    with pytest.raises(CheckpointWriteError):
+        m.wait_until_finished()
+
+
+def test_manager_restore_without_checkpoints_raises(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        m.restore(_like(TREE))
+
+
+def test_manifest_records_byte_accounting(tmp_path):
+    tree = {"m": np.zeros((128, 64), np.float32)}
+    ckpt.save(str(tmp_path), 1, tree, codecs=["int8_ef"])
+    man = ckpt.read_manifest(str(tmp_path), 1)
+    assert man["version"] == ckpt.MANIFEST_VERSION
+    leaf = man["leaves"][0]
+    assert leaf["raw_bytes"] == 128 * 64 * 4
+    # int8 payload is exactly 1/4 of fp32; the residual sidecar of an
+    # all-zero leaf deflates to almost nothing
+    assert leaf["stored_bytes"] < leaf["raw_bytes"] // 2
+    assert man["stored_bytes"] == leaf["stored_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis; skipped when not installed)
+# ---------------------------------------------------------------------------
+
+finite_f32 = st.floats(min_value=-1e30, max_value=1e30, width=32,
+                       allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=64))
+def test_codec_roundtrip_property(xs):
+    arr = np.asarray(xs, np.float32)
+    if not codec_mod.encodable(arr):
+        return
+    enc = codec_mod.encode_int8_ef(arr)
+    dec = codec_mod.decode_int8_ef(enc.payload, enc.residual_z, enc.scale,
+                                   enc.dtype, arr.shape)
+    assert np.asarray(dec).tobytes() == arr.tobytes()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=32),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_storable_roundtrip_property(xs, seed):
+    # bf16 is the adversarial storage dtype: no native npy support
+    arr = np.asarray(xs, np.float32).astype(jnp.bfloat16)
+    store, logical = ckpt._storable(arr)
+    assert store.dtype == np.uint16 and logical == "bfloat16"
+    back = ckpt._unstorable(store, logical)
+    assert back.tobytes() == arr.tobytes()
+
+
+if HAVE_HYPOTHESIS:
+    def test_property_suite_active():
+        """Marker so CI logs show the hypothesis tests actually ran."""
+        assert True

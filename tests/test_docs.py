@@ -28,7 +28,8 @@ def test_doc_corpus_found():
     names = {p.name for p in DOC_FILES}
     assert "README.md" in names
     assert {"architecture.md", "oisma_engine.md", "sim_scaleout.md",
-            "bent_pyramid.md", "observability.md"} <= names
+            "bent_pyramid.md", "observability.md",
+            "fault_tolerance.md"} <= names
     # the suite must actually exercise snippets somewhere
     assert any(python_blocks(p) for p in DOC_FILES)
 
